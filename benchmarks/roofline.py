@@ -1,0 +1,159 @@
+"""Roofline analysis over the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads ``artifacts/dryrun/*.json`` and derives, per (arch x shape x mesh):
+
+  compute term    = HLO flops / chip-peak           (197 TFLOP/s bf16)
+  memory term     = HLO bytes accessed / HBM bw     (819 GB/s)
+  collective term = wire bytes / link bw            (50 GB/s ICI; /10 DCI)
+
+Wire bytes apply ring-algorithm factors to the parsed per-device result
+bytes: all-reduce 2x(n-1)/n, all-gather/reduce-scatter (n-1)/n, all-to-all
+(n-1)/n, collective-permute 1x.  n is approximated by the largest mesh axis
+(16) — exact group sizes vary per op; the factor range is [0.94, 2].
+
+Also reported: MODEL_FLOPS (6ND / 2ND per token), the useful-flops ratio,
+and an attention-traffic-adjusted memory term: the XLA reference path
+materializes (bq, S) score tiles in HBM that the Pallas flash kernel keeps
+in VMEM on the TPU target — the adjusted term subtracts that traffic to
+show the kernel headroom explicitly.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK = 197e12
+HBM = 819e9
+ICI = 50e9
+DCI_FACTOR = 10.0
+RING_N = 16
+
+FACTORS = {"all-reduce": 2.0 * (RING_N - 1) / RING_N,
+           "all-gather": (RING_N - 1) / RING_N,
+           "reduce-scatter": (RING_N - 1) / RING_N,
+           "all-to-all": (RING_N - 1) / RING_N,
+           "collective-permute": 1.0}
+
+
+def wire_bytes(collectives: dict) -> float:
+    total = 0.0
+    for kind, fac in FACTORS.items():
+        total += collectives.get(kind, 0.0) * fac
+    return total
+
+
+def load_results(art_dir: str = "artifacts/dryrun") -> list[dict]:
+    out = []
+    for f in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        with open(f) as fh:
+            out.append(json.load(fh))
+    return out
+
+
+def _score_traffic_bytes(r: dict) -> float:
+    """HBM traffic of the attention score/probs tensors on the XLA
+    reference path — traffic the Pallas flash kernel keeps in VMEM on the
+    TPU target.  Per attention layer and pass the (B_loc, H_loc, Sq, Sk_eff)
+    f32 scores are written+read and the probs written+read again (~4
+    touches fwd); training adds remat-fwd + bwd (~10 touches total)."""
+    import repro.configs as _cfgs
+    cfg = _cfgs.get_config(r["arch"])
+    from repro.launch.shapes import SHAPES
+    cell = SHAPES[r["shape"]]
+    if cell.kind == "decode":
+        return 0.0     # decode scores are (B,H,1,S) — negligible
+    B, S = cell.global_batch, cell.seq_len
+    dp = 32 if r["mesh"].startswith("2x") else 16
+    dp_over_model = r.get("env", {}).get("dp_over_model", False)
+    if dp_over_model:
+        dp *= 16
+    B_loc = B // dp if B % dp == 0 else B
+    touches = 10.0 if cell.kind == "train" else 4.0
+    total = 0.0
+    for kind in cfg.layer_kinds:
+        if kind not in ("attn", "local", "swa", "xattn"):
+            continue
+        H_loc = cfg.n_heads / 16 if (cfg.n_heads % 16 == 0
+                                     and not dp_over_model) else cfg.n_heads
+        sk = cfg.n_frontend_tokens if kind == "xattn" else \
+            min(S, cfg.window or S) if kind in ("local", "swa") else S
+        # blockwise path bounds the resident tile but traffic is still
+        # proportional to Sq x Sk_eff
+        total += touches * B_loc * H_loc * S * min(sk, S) * 4.0
+    return total
+
+
+def roofline_row(r: dict) -> dict:
+    mesh_multi = r["mesh"].startswith("2x")
+    link = ICI / (DCI_FACTOR if mesh_multi else 1.0)
+    flops = r["cost"]["flops_per_device"]
+    byts = r["cost"]["bytes_per_device"]
+    wb = wire_bytes(r.get("collectives", {}))
+    compute_s = flops / PEAK
+    memory_s = byts / HBM
+    adj_bytes = max(byts - _score_traffic_bytes(r), 0.0)
+    memory_adj_s = adj_bytes / HBM
+    coll_s = wb / link
+    dominant = max([("compute", compute_s), ("memory", memory_adj_s),
+                    ("collective", coll_s)], key=lambda kv: kv[1])[0]
+    step_s = max(compute_s, memory_adj_s, coll_s)
+    return {
+        "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+        "compute_s": compute_s, "memory_s": memory_s,
+        "memory_adj_s": memory_adj_s,
+        "collective_s": coll_s, "bottleneck": dominant,
+        "step_lower_bound_s": step_s,
+        "model_flops_per_device": r.get("model_flops_per_device", 0.0),
+        "useful_ratio": r.get("useful_flops_ratio", 0.0),
+        # fraction of roofline the *useful* model flops achieve if the step
+        # runs at its dominant-term lower bound:
+        "roofline_fraction": (r.get("model_flops_per_device", 0.0) / PEAK)
+        / step_s if step_s > 0 else 0.0,
+        "peak_gib": r["memory"]["peak_bytes_per_device"] / 2 ** 30,
+        "fits_hbm": r["memory"]["peak_bytes_per_device"] < 16 * 2 ** 30,
+    }
+
+
+def table(art_dir: str = "artifacts/dryrun", mesh: str = "16x16",
+          mode: str = "datacentric") -> list[dict]:
+    rows = []
+    for r in load_results(art_dir):
+        if r.get("status") != "ok":
+            continue
+        if r["mesh"] != mesh or r.get("sync_mode", "datacentric") != mode:
+            continue
+        if r.get("remat", "full") != "full":
+            continue
+        rows.append(roofline_row(r))
+    rows.sort(key=lambda x: (x["arch"], x["shape"]))
+    return rows
+
+
+def render_markdown(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | compute ms | memory ms (raw/adj) | "
+           "collective ms | bottleneck | roofline frac | peak GiB |\n"
+           "|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for x in rows:
+        lines.append(
+            f"| {x['arch']} | {x['shape']} | {x['compute_s']*1e3:.2f} | "
+            f"{x['memory_s']*1e3:.2f} / {x['memory_adj_s']*1e3:.2f} | "
+            f"{x['collective_s']*1e3:.2f} | "
+            f"{x['bottleneck']} | {x['roofline_fraction']:.3f} | "
+            f"{x['peak_gib']:.2f} |")
+    return hdr + "\n".join(lines)
+
+
+def bench_rows() -> list[tuple[str, str, float]]:
+    out = []
+    for x in table():
+        out.append(("roofline", f"{x['arch']}__{x['shape']}__frac",
+                    x["roofline_fraction"]))
+    return out
+
+
+if __name__ == "__main__":
+    import sys
+    mesh = sys.argv[1] if len(sys.argv) > 1 else "16x16"
+    print(render_markdown(table(mesh=mesh)))

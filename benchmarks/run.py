@@ -1,0 +1,40 @@
+"""Benchmark harness entry point: one function per paper table/figure plus
+the roofline summary.  Prints ``name,us_per_call,derived`` CSV rows — for
+figure benchmarks 'us_per_call' is the benchmark's own wall time and
+'derived' the reproduced metric (improvement % / speedup / roofline
+fraction)."""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from . import figures, roofline
+
+    quick = "--quick" in sys.argv
+    print("name,us_per_call,derived")
+    figs = figures.ALL_FIGS
+    if quick:
+        figs = [figures.fig2a_worker_scaling, figures.fig2e_sgd_workers]
+    for fig in figs:
+        t0 = time.perf_counter()
+        rows = fig()
+        dt_us = (time.perf_counter() - t0) * 1e6 / max(len(rows), 1)
+        for group, label, value in rows:
+            print(f"{group}/{label},{dt_us:.1f},{value:.4f}")
+
+    # roofline fractions from the dry-run artifacts (if present)
+    try:
+        rows = roofline.bench_rows()
+        for group, label, value in rows:
+            print(f"{group}/{label},0.0,{value:.4f}")
+        if not rows:
+            print("roofline/none,0.0,0.0  # run repro.launch.dryrun first",
+                  file=sys.stderr)
+    except Exception as e:  # artifacts missing: benchmarks still usable
+        print(f"# roofline skipped: {e}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

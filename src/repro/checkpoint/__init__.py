@@ -1,0 +1,3 @@
+"""Fault-tolerant checkpointing with cross-mesh resharding."""
+from .checkpoint import (latest_step, load_checkpoint, restore_onto_mesh,  # noqa: F401
+                         save_checkpoint)

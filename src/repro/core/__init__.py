@@ -1,0 +1,11 @@
+"""Core: the paper's parameter-database synchronization framework.
+
+  history    — formal operation-history model + Theorem 1-3 checkers
+  scheduler  — Sec-5 bit-vector / Sec-7.1 delta protocols + BSP baseline
+  simulator  — discrete-event makespan simulation (Fig 2 reproduction)
+  threaded   — live multi-threaded linear-regression runtime (Sec 6)
+  staleness  — deterministic delta-staleness engine for JAX training
+  sync_jax   — sync-mode -> sharding-rule mapping for SPMD training
+"""
+from . import history, scheduler, simulator, sync_jax, threaded  # noqa: F401
+from .sync_jax import SyncConfig  # noqa: F401

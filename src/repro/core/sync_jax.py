@@ -1,0 +1,91 @@
+"""Synchronization-mode configuration for the JAX training stack.
+
+Maps the paper's two synchronization regimes onto sharded-training layouts:
+
+  * ``bsp``         — the Algorithm-2a baseline: parameters replicated over
+    the data-parallel axes; one global gradient all-reduce per step is the
+    read barrier (every worker's iteration-alpha+1 reads wait on *all*
+    iteration-alpha writes).
+  * ``datacentric`` — the paper's contribution mapped to SPMD: the parameter
+    database is *sharded* over the data axis (partition set Pi = per-layer
+    weight shards).  Reads are per-partition all-gathers, writes are
+    per-partition reduce-scatters; XLA's dataflow graph enforces exactly the
+    RC/WC ordering (all-gather of layer j waits only on layer j's shard), so
+    per-partition communication overlaps compute — the Theorem-3 concurrency.
+
+The tables below are *logical axis → mesh axis preference lists*; the
+sharding engine in :mod:`repro.launch.sharding` resolves them against a
+concrete mesh with divisibility fallbacks.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+BSP = "bsp"
+DATACENTRIC = "datacentric"
+
+# Logical parameter axes used by the model zoo:
+#   vocab     — embedding / lm-head vocabulary dim
+#   embed     — d_model dims of weight matrices (the FSDP shard dim)
+#   ffn       — feed-forward hidden dim
+#   heads     — flattened (n_heads * head_dim) projection dim
+#   kv_heads  — flattened (n_kv_heads * head_dim) projection dim
+#   experts   — MoE expert dim
+#   layers    — stacked scan dim (never sharded)
+#   batch/seq/kv_seq — activation & cache dims
+
+_TP_RULES = {
+    "vocab": ("model",),
+    "ffn": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "experts": ("model",),
+    "layers": (),
+}
+
+RULES = {
+    # data-centric: parameter database sharded over `data` (ZeRO-3 partitions)
+    DATACENTRIC: {**_TP_RULES, "embed": ("data",)},
+    # bsp: parameters replicated over `data`; only tensor-parallel sharding
+    BSP: {**_TP_RULES, "embed": ()},
+}
+
+ACTIVATION_RULES = {
+    "batch": (("pod", "data"), ("data",)),   # first spec that divides wins
+    "seq": (),
+    "kv_seq": ("model",),                    # SP fallback for long caches
+    "act_embed": (),
+    "act_vocab": ("model",),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class SyncConfig:
+    """How parameter reads/writes are synchronized during training."""
+    mode: str = DATACENTRIC          # "bsp" | "datacentric"
+    delta: int = 0                   # admissible staleness (Sec 7); 0 = exact
+    compression: str = "none"        # "none" | "int8" gradient compression
+    remat: str = "full"              # "none" | "full" | "dots"
+    # per-partition-group delays (Sec 7.1 per-chunk version arrays):
+    group_delays: tuple[tuple[str, int], ...] = ()
+
+    def __post_init__(self):
+        if self.mode not in (BSP, DATACENTRIC):
+            raise ValueError(f"unknown sync mode {self.mode!r}")
+        if self.delta < 0:
+            raise ValueError("delta must be >= 0")
+
+    @property
+    def param_rules(self) -> dict:
+        return RULES[self.mode]
+
+    def delay_for(self, path: tuple) -> int:
+        """Resolve a pytree path to its group delay (longest-prefix match on
+        the path's string form); defaults to the uniform delta."""
+        s = "/".join(getattr(p, "key", str(p)) for p in path)
+        best = self.delta
+        best_len = -1
+        for prefix, d in self.group_delays:
+            if s.startswith(prefix) and len(prefix) > best_len:
+                best, best_len = d, len(prefix)
+        return best

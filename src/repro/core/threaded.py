@@ -1,0 +1,226 @@
+"""Live multi-threaded parameter-database runtime (paper Sec 6).
+
+Real Python threads train a feature-partitioned linear-regression model
+(the paper's prototype task) against a blocking parameter store that
+enforces either the BSP barriers (Algorithm 2a) or the data-centric RC/WC
+constraints (Algorithm 2b / Sec-7.1 protocol).
+
+Correctness property (the paper's central claim): with ``delta=0`` the final
+parameter vector is **bit-identical** to single-threaded sequential
+execution, for GD, SGD and mini-batch — regardless of thread interleaving.
+This holds because each worker's chunk update is a deterministic function of
+the full-theta snapshot it read (whose value RC/WC pins to exactly the
+previous iteration's writes) and a shared, pre-drawn sample schedule.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Literal
+
+import numpy as np
+
+from .history import Op, READ, WRITE
+
+
+@dataclasses.dataclass(frozen=True)
+class LRTask:
+    """A linear-regression training task (the paper's Sec-6 workload)."""
+    X: np.ndarray            # (n_examples, n_features)
+    y: np.ndarray            # (n_examples,)
+    lr: float = 0.05
+    n_iters: int = 30
+    mode: Literal["gd", "sgd", "minibatch"] = "gd"
+    batch_size: int = 100
+    seed: int = 0
+
+    def sample_schedule(self) -> np.ndarray | None:
+        """Pre-draw the SGD/mini-batch sample indices per iteration so every
+        execution (sequential or parallel, any policy) sees the same data
+        order — required for the bit-identical guarantee."""
+        n = self.X.shape[0]
+        rng = np.random.default_rng(self.seed)
+        if self.mode == "sgd":
+            return rng.integers(0, n, size=(self.n_iters, 1))
+        if self.mode == "minibatch":
+            return rng.integers(0, n, size=(self.n_iters, self.batch_size))
+        return None
+
+
+def make_synthetic_lr(n_examples: int, n_features: int,
+                      seed: int = 0, noise: float = 0.01) -> tuple[np.ndarray, np.ndarray]:
+    """Synthetic dataset in the style of Sec 6.1 (960 features, 5000 rows)."""
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n_examples, n_features)) / np.sqrt(n_features)
+    w_true = rng.normal(size=n_features)
+    y = X @ w_true + noise * rng.normal(size=n_examples)
+    return X, y
+
+
+def chunk_slices(n_features: int, n_workers: int) -> list[slice]:
+    bounds = np.linspace(0, n_features, n_workers + 1).astype(int)
+    return [slice(int(a), int(b)) for a, b in zip(bounds[:-1], bounds[1:])]
+
+
+def _chunk_update(task: LRTask, theta: np.ndarray, sl: slice, itr: int,
+                  schedule: np.ndarray | None) -> np.ndarray:
+    """New value for one feature chunk given a full-theta snapshot.
+    Deterministic in (theta, itr) — the f_i of Equation 1."""
+    X, y = task.X, task.y
+    if task.mode == "gd":
+        resid = X @ theta - y
+        g = X[:, sl].T @ resid / X.shape[0]
+    else:
+        idx = schedule[itr - 1]
+        Xb = X[idx]
+        resid = Xb @ theta - y[idx]
+        g = Xb[:, sl].T @ resid / len(idx)
+    return theta[sl] - task.lr * g
+
+
+def run_sequential(task: LRTask, n_workers: int) -> np.ndarray:
+    """Algorithm 1: the single-threaded ground truth (same chunking)."""
+    slices = chunk_slices(task.X.shape[1], n_workers)
+    schedule = task.sample_schedule()
+    theta = np.zeros(task.X.shape[1])
+    for itr in range(1, task.n_iters + 1):
+        snap = theta.copy()          # all reads precede all writes
+        news = [_chunk_update(task, snap, sl, itr, schedule) for sl in slices]
+        for sl, v in zip(slices, news):
+            theta[sl] = v
+    return theta
+
+
+# ---------------------------------------------------------------------------
+# Blocking parameter stores
+# ---------------------------------------------------------------------------
+
+class RCWCStore:
+    """The Sec-5 / Sec-7.1 protocol as a blocking store.
+
+    read(worker, chunk, itr)  blocks until version[chunk] >= itr - 1 - delta
+    write(worker, chunk, itr) blocks until min_k last_read[chunk][k] >= itr - delta
+    """
+
+    def __init__(self, init_chunks: list[np.ndarray], n_workers: int,
+                 delta: int = 0, record: bool = False):
+        self.chunks = [c.copy() for c in init_chunks]
+        self.version = [0] * len(init_chunks)
+        self.last_read = [[0] * n_workers for _ in init_chunks]
+        self.delta = delta
+        self.cond = threading.Condition()
+        self.history: list[Op] | None = [] if record else None
+
+    def read(self, worker: int, chunk: int, itr: int) -> np.ndarray:
+        with self.cond:
+            self.cond.wait_for(
+                lambda: self.version[chunk] >= itr - 1 - self.delta)
+            val = self.chunks[chunk].copy()
+            self.last_read[chunk][worker] = itr
+            if self.history is not None:
+                self.history.append(Op(READ, worker, chunk, itr))
+            self.cond.notify_all()
+            return val
+
+    def write(self, worker: int, chunk: int, itr: int, value: np.ndarray) -> None:
+        with self.cond:
+            self.cond.wait_for(
+                lambda: min(self.last_read[chunk]) >= itr - self.delta)
+            self.chunks[chunk] = value
+            self.version[chunk] = itr
+            if self.history is not None:
+                self.history.append(Op(WRITE, worker, chunk, itr))
+            self.cond.notify_all()
+
+
+class BSPStore:
+    """Algorithm 2a: read barrier + write barrier around a plain store."""
+
+    def __init__(self, init_chunks: list[np.ndarray], n_workers: int,
+                 record: bool = False):
+        self.chunks = [c.copy() for c in init_chunks]
+        self.read_barrier = threading.Barrier(n_workers)
+        self.write_barrier = threading.Barrier(n_workers)
+        self.lock = threading.Lock()
+        self.history: list[Op] | None = [] if record else None
+
+    def read_all(self, worker: int, itr: int) -> list[np.ndarray]:
+        self.read_barrier.wait()     # wait for all writes of itr-1
+        with self.lock:
+            vals = [c.copy() for c in self.chunks]
+            if self.history is not None:
+                for j in range(len(self.chunks)):
+                    self.history.append(Op(READ, worker, j, itr))
+        return vals
+
+    def write(self, worker: int, chunk: int, itr: int, value: np.ndarray) -> None:
+        self.write_barrier.wait()    # wait for all reads of itr
+        with self.lock:
+            self.chunks[chunk] = value
+            if self.history is not None:
+                self.history.append(Op(WRITE, worker, chunk, itr))
+
+
+# ---------------------------------------------------------------------------
+# Parallel runners
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class RunStats:
+    theta: np.ndarray
+    wall_time: float
+    history: list[Op] | None
+
+
+def run_parallel(task: LRTask, n_workers: int, policy: str = "dc",
+                 delta: int = 0, record_history: bool = False) -> RunStats:
+    """Train with ``n_workers`` real threads under the given policy."""
+    d = task.X.shape[1]
+    slices = chunk_slices(d, n_workers)
+    schedule = task.sample_schedule()
+    init = [np.zeros(sl.stop - sl.start) for sl in slices]
+
+    if policy == "bsp":
+        store: RCWCStore | BSPStore = BSPStore(init, n_workers, record_history)
+    elif policy == "dc":
+        store = RCWCStore(init, n_workers, delta, record_history)
+    else:
+        raise ValueError(f"unknown policy {policy!r}")
+
+    errors: list[BaseException] = []
+
+    def worker(i: int) -> None:
+        try:
+            for itr in range(1, task.n_iters + 1):
+                if policy == "bsp":
+                    vals = store.read_all(i, itr)          # type: ignore[union-attr]
+                else:
+                    vals = [store.read(i, j, itr)          # type: ignore[union-attr]
+                            for j in range(n_workers)]
+                theta = np.concatenate(vals)
+                new = _chunk_update(task, theta, slices[i], itr, schedule)
+                store.write(i, i, itr, new)
+        except BaseException as e:  # surface thread failures to the caller
+            errors.append(e)
+            raise
+
+    threads = [threading.Thread(target=worker, args=(i,), daemon=True)
+               for i in range(n_workers)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=300)
+    wall = time.perf_counter() - t0
+    if errors:
+        raise errors[0]
+    if any(t.is_alive() for t in threads):
+        raise RuntimeError("worker threads did not terminate (deadlock?)")
+    theta = np.concatenate([c for c in store.chunks])
+    return RunStats(theta, wall, store.history)
+
+
+def loss(task: LRTask, theta: np.ndarray) -> float:
+    r = task.X @ theta - task.y
+    return float(0.5 * np.mean(r * r))

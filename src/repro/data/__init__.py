@@ -1,0 +1,3 @@
+"""Deterministic synthetic data pipelines."""
+from .synthetic import (LMBatchSpec, lm_batch_stream, make_lm_batch,  # noqa: F401
+                        regression_dataset, sparse_regression_dataset)

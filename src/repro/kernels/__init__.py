@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the compute hot-spots, with jnp reference oracles.
+
+  flash_attention — tiled online-softmax attention (causal + window, GQA)
+  rwkv6_scan      — RWKV-6 WKV recurrence ((hd,hd) state in VMEM scratch)
+  rglru_scan      — Griffin RG-LRU gated linear recurrence
+  ops             — jit'd dispatch (ref | pallas | interpret)
+  ref             — pure-jnp oracles (ground truth + XLA execution path)
+"""
+from . import ops, ref  # noqa: F401

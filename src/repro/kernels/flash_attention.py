@@ -1,0 +1,138 @@
+"""Pallas TPU flash attention (causal + sliding window, GQA-aware).
+
+Tiling: grid = (batch, q_heads, q_blocks, kv_blocks); the kv_blocks axis is
+minor-most, so on TPU it iterates sequentially per (b, h, iq) and the online
+softmax state (m, l, acc) lives in VMEM scratch across kv iterations.
+GQA is handled in the BlockSpec index maps (kv head = q head // group), so
+K/V are never materialized per-q-head.
+
+Block shapes are multiples of the (8, 128) VPU / 128x128 MXU tiles; the
+working set per grid step is q(bq,hd) + k(bk,hd) + v(bk,hd) + acc(bq,hd)
+f32 scratch — e.g. bq=bk=256, hd=128: ~512 KiB, comfortably inside the
+~16 MiB v5e VMEM even with double buffering.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                 scale: float, causal: bool, window: int,
+                 block_q: int, block_k: int, seq_len: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = iq * block_q
+    k_start = ik * block_k
+
+    # skip blocks that are entirely masked out (causal/window locality)
+    def masked_out() -> jnp.ndarray:
+        done = jnp.bool_(False)
+        if causal:
+            done |= k_start > q_start + block_q - 1
+        if window > 0:
+            done |= k_start + block_k - 1 <= q_start - window
+        return done
+
+    @pl.when(jnp.logical_not(masked_out()))
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # (bq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)            # (bk, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (bq, bk)
+
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = kpos < seq_len
+        if causal:
+            mask &= kpos <= qpos
+        if window > 0:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]                             # (bq,)
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[:, None])
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + p @ v
+        m_scr[...] = m_cur
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "block_q", "block_k", "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False) -> jnp.ndarray:
+    """q: (B, S, H, hd); k, v: (B, S, KV, hd) -> (B, S, H, hd)."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    group = H // KV
+    scale = hd ** -0.5
+
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    # pad sequence to block multiples (kernel masks the tail)
+    S_pad = math.ceil(S / block_q) * block_q
+    S_pad = math.ceil(S_pad / block_k) * block_k
+    if S_pad != S:
+        pad = ((0, 0), (0, S_pad - S), (0, 0), (0, 0))
+        q = jnp.pad(q, pad)
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+
+    # (B, H, S, hd) layout: heads in grid, seq blocked
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+
+    grid = (B, H, S_pad // block_q, S_pad // block_k)
+
+    out = pl.pallas_call(
+        functools.partial(_attn_kernel, scale=scale, causal=causal,
+                          window=window, block_q=block_q, block_k=block_k,
+                          seq_len=S),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd),
+                         lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, iq, ik, g=group: (b, h // g, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, iq, ik, g=group: (b, h // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd),
+                               lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S_pad, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),      # running max m
+            pltpu.VMEM((block_q,), jnp.float32),      # running sum l
+            pltpu.VMEM((block_q, hd), jnp.float32),   # accumulator
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+
+    return out.transpose(0, 2, 1, 3)[:, :S]

@@ -1,0 +1,82 @@
+"""Jit'd dispatch layer over the Pallas kernels and their jnp references.
+
+The models call only these entry points.  Implementation choice:
+
+  * ``REPRO_KERNEL_IMPL=ref``      (default) — XLA path; used on CPU, in the
+    dry-run lowering, and anywhere Pallas-to-backend lowering is unavailable.
+  * ``REPRO_KERNEL_IMPL=pallas``   — the Pallas TPU kernels (real hardware).
+  * ``REPRO_KERNEL_IMPL=interpret`` — Pallas kernels in interpret mode
+    (Python emulation on CPU; what the kernel tests use).
+
+Both paths compute identical math — tests/test_kernels.py sweeps shapes and
+dtypes asserting allclose between them.
+"""
+from __future__ import annotations
+
+import os
+
+import jax.numpy as jnp
+
+from . import ref
+
+_VALID = ("ref", "pallas", "interpret")
+
+
+def kernel_impl() -> str:
+    impl = os.environ.get("REPRO_KERNEL_IMPL", "ref")
+    if impl not in _VALID:
+        raise ValueError(f"REPRO_KERNEL_IMPL={impl!r}; want one of {_VALID}")
+    return impl
+
+
+# sequences at or above this length take the blockwise XLA path (bounded
+# score-matrix memory); below it the plain path fuses better
+CHUNK_THRESHOLD = int(os.environ.get("REPRO_ATTN_CHUNK_THRESHOLD", 4096))
+
+
+def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+              causal: bool = True, window: int = 0,
+              impl: str | None = None) -> jnp.ndarray:
+    impl = impl or kernel_impl()
+    if impl == "ref":
+        S = q.shape[1]
+        if S >= CHUNK_THRESHOLD and S % min(1024, S) == 0 \
+                and q.shape[1] == k.shape[1]:
+            return ref.attention_chunked(q, k, v, causal=causal,
+                                         window=window)
+        return ref.attention(q, k, v, causal=causal, window=window)
+    from .flash_attention import flash_attention
+    return flash_attention(q, k, v, causal=causal, window=window,
+                           interpret=(impl == "interpret"))
+
+
+def attention_decode(q, k, v, valid, impl: str | None = None):
+    # One-token decode is a memory-bound gather + tiny matvec; the XLA path
+    # is already roofline-optimal — no Pallas kernel is warranted.
+    return ref.attention_decode(q, k, v, valid)
+
+
+def rwkv6(r, k, v, w, u, impl: str | None = None):
+    impl = impl or kernel_impl()
+    if impl == "ref":
+        return ref.rwkv6(r, k, v, w, u)
+    from .rwkv6_scan import rwkv6_scan
+    return rwkv6_scan(r, k, v, w, u, interpret=(impl == "interpret"))
+
+
+def rwkv6_stateful(r, k, v, w, u, S0, impl: str | None = None):
+    # Stateful (decode) path: T is tiny; the scan reference is optimal.
+    return ref.rwkv6_stateful(r, k, v, w, u, S0)
+
+
+def rglru(x, a, impl: str | None = None):
+    impl = impl or kernel_impl()
+    if impl == "ref":
+        h, _ = ref.rglru(x, a)
+        return h
+    from .rglru_scan import rglru_scan
+    return rglru_scan(x, a, interpret=(impl == "interpret"))
+
+
+def rglru_stateful(x, a, h0, impl: str | None = None):
+    return ref.rglru(x, a, h0)

@@ -1,0 +1,169 @@
+"""Pure-jnp oracles for every kernel.  These are the correctness ground
+truth (tests assert the Pallas kernels match them) AND the XLA execution
+path used on CPU / in the dry-run lowering."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _repeat_kv(k: jnp.ndarray, n_heads: int) -> jnp.ndarray:
+    """(B, S, KV, hd) -> (B, S, H, hd) by repeating each kv head."""
+    n_kv = k.shape[-2]
+    if n_kv == n_heads:
+        return k
+    return jnp.repeat(k, n_heads // n_kv, axis=-2)
+
+
+def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+              causal: bool = True, window: int = 0) -> jnp.ndarray:
+    """Full-sequence attention with GQA.
+
+    q: (B, S, H, hd);  k, v: (B, S, KV, hd)  ->  (B, S, H, hd).
+    window > 0 restricts key positions to (qpos - window, qpos].
+    """
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    k = _repeat_kv(k, H)
+    v = _repeat_kv(v, H)
+    scale = hd ** -0.5
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask, scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v)
+    return out.astype(q.dtype)
+
+
+def attention_chunked(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                      causal: bool = True, window: int = 0,
+                      block_q: int = 1024) -> jnp.ndarray:
+    """Blockwise attention for long sequences on the XLA path: scan over
+    query chunks so the score matrix never exceeds (block_q, S) per
+    batch-head — the flash-attention memory bound without Pallas.  This is
+    what the dry-run lowers for seq >= _CHUNK_THRESHOLD; on TPU hardware the
+    Pallas kernel (kernels/flash_attention.py) replaces it."""
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    k = _repeat_kv(k, H)
+    v = _repeat_kv(v, H)
+    bq = min(block_q, Sq)
+    assert Sq % bq == 0, (Sq, bq)
+    nq = Sq // bq
+    scale = hd ** -0.5
+
+    qb = jnp.moveaxis(q.reshape(B, nq, bq, H, hd), 1, 0)   # (nq,B,bq,H,hd)
+    kpos = jnp.arange(Sk)[None, :]
+
+    def chunk(i, qc):
+        qstart = i * bq
+        scores = jnp.einsum("bqhd,bkhd->bhqk", qc, k,
+                            preferred_element_type=jnp.float32) * scale
+        qpos = qstart + jnp.arange(bq)[:, None]
+        mask = jnp.ones((bq, Sk), bool)
+        if causal:
+            mask &= kpos <= qpos
+        if window > 0:
+            mask &= kpos > qpos - window
+        scores = jnp.where(mask, scores, -jnp.inf)
+        probs = jax.nn.softmax(scores, axis=-1)
+        return jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v)
+
+    out = jax.lax.map(lambda args: chunk(*args),
+                      (jnp.arange(nq), qb))                # (nq,B,bq,H,hd)
+    return jnp.moveaxis(out, 0, 1).reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def attention_decode(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     valid: jnp.ndarray) -> jnp.ndarray:
+    """Single-token decode.  q: (B, 1, H, hd); k, v: (B, L, KV, hd);
+    valid: (L,) bool mask of live cache slots."""
+    B, _, H, hd = q.shape
+    k = _repeat_kv(k, H)
+    v = _repeat_kv(v, H)
+    scale = hd ** -0.5
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    scores = jnp.where(valid[None, None, None, :], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v)
+    return out.astype(q.dtype)
+
+
+def rwkv6(r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+          w: jnp.ndarray, u: jnp.ndarray) -> jnp.ndarray:
+    """RWKV-6 WKV recurrence (Finch, arXiv:2404.05892).
+
+    r, k, v, w: (B, T, H, hd) with w in (0,1) the data-dependent decay;
+    u: (H, hd) the current-token bonus.  Returns (B, T, H, hd).
+
+        y_t[j] = sum_i r_t[i] * (S_t[i,j] + u[i] k_t[i] v_t[j])
+        S_{t+1}[i,j] = w_t[i] S_t[i,j] + k_t[i] v_t[j]
+    """
+    B, T, H, hd = r.shape
+    rf, kf, vf, wf = (x.astype(jnp.float32) for x in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp                        # (B, H, hd)
+        y = jnp.einsum("bhi,bhij->bhj", r_t, S)
+        bonus = jnp.einsum("bhi,bhi->bh", r_t, uf[None] * k_t)
+        y = y + bonus[..., None] * v_t
+        S = S * w_t[..., :, None] + k_t[..., :, None] * v_t[..., None, :]
+        return S, y
+
+    S0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    xs = tuple(jnp.moveaxis(x, 1, 0) for x in (rf, kf, vf, wf))
+    _, ys = jax.lax.scan(step, S0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(r.dtype)
+
+
+def rwkv6_stateful(r, k, v, w, u, S0):
+    """Decode-friendly variant: explicit input/output state (B,H,hd,hd)."""
+    B, T, H, hd = r.shape
+    rf, kf, vf, wf = (x.astype(jnp.float32) for x in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp
+        y = jnp.einsum("bhi,bhij->bhj", r_t, S)
+        bonus = jnp.einsum("bhi,bhi->bh", r_t, uf[None] * k_t)
+        y = y + bonus[..., None] * v_t
+        S = S * w_t[..., :, None] + k_t[..., :, None] * v_t[..., None, :]
+        return S, y
+
+    xs = tuple(jnp.moveaxis(x, 1, 0) for x in (rf, kf, vf, wf))
+    S1, ys = jax.lax.scan(step, S0.astype(jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 1).astype(r.dtype), S1
+
+
+def rglru(x: jnp.ndarray, a: jnp.ndarray,
+          h0: jnp.ndarray | None = None) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """RG-LRU linear recurrence (Griffin, arXiv:2402.19427).
+
+    x: (B, T, D) gated input (i_t * x_t); a: (B, T, D) decay in (0,1).
+        h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * x_t
+    Returns (h (B,T,D), final state (B,D)).
+    """
+    B, T, D = x.shape
+    xf, af = x.astype(jnp.float32), a.astype(jnp.float32)
+    gate = jnp.sqrt(jnp.clip(1.0 - af * af, 0.0, 1.0))
+
+    def step(h, inp):
+        x_t, a_t, g_t = inp
+        h = a_t * h + g_t * x_t
+        return h, h
+
+    init = (jnp.zeros((B, D), jnp.float32) if h0 is None
+            else h0.astype(jnp.float32))
+    xs = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(af, 1, 0),
+          jnp.moveaxis(gate, 1, 0))
+    hT, hs = jax.lax.scan(step, init, xs)
+    return jnp.moveaxis(hs, 0, 1).astype(x.dtype), hT

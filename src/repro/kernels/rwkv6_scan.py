@@ -1,0 +1,83 @@
+"""Pallas TPU kernel for the RWKV-6 WKV recurrence.
+
+Per (batch, head) the recurrence carries a (hd, hd) f32 state matrix:
+
+    y_t   = r_t @ S_t + (r_t . (u * k_t)) v_t
+    S_t+1 = diag(w_t) S_t + k_t v_t^T
+
+Tiling: grid = (B, H, T // block_t); the time axis is minor-most so the
+state matrix persists in VMEM scratch across time blocks of one (b, h).
+Inside a block we jax.lax.fori_loop over the block_t steps; each step is a
+(hd,)x(hd,hd) matvec + rank-1 update — hd=64 keeps the state at 16 KiB f32,
+far below VMEM limits, and the (block_t, hd) operand tiles stream through.
+
+This is the TPU-native adaptation of the CUDA wkv kernels: instead of one
+thread per channel with warp-level reductions, whole (hd, hd) panels live
+in VMEM and the MXU/VPU execute the matvec/outer-product per step.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, y_ref, state_scr, *,
+                block_t: int, seq_len: int):
+    it = pl.program_id(2)
+
+    @pl.when(it == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    u = u_ref[0].astype(jnp.float32)                    # (hd,)
+
+    def step(t, S):
+        # refs hold one (1,1,block_t,hd) tile; index the time row
+        r_t = r_ref[0, 0, t].astype(jnp.float32)        # (hd,)
+        k_t = k_ref[0, 0, t].astype(jnp.float32)
+        v_t = v_ref[0, 0, t].astype(jnp.float32)
+        w_t = w_ref[0, 0, t].astype(jnp.float32)
+        y = r_t @ S + jnp.sum(r_t * u * k_t) * v_t      # (hd,)
+        y_ref[0, 0, t] = y.astype(y_ref.dtype)
+        return S * w_t[:, None] + k_t[:, None] * v_t[None, :]
+
+    n_valid = jnp.minimum(block_t, seq_len - it * block_t)
+    state_scr[...] = jax.lax.fori_loop(0, n_valid, step, state_scr[...])
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
+def rwkv6_scan(r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+               w: jnp.ndarray, u: jnp.ndarray,
+               block_t: int = 64, interpret: bool = False) -> jnp.ndarray:
+    """r, k, v, w: (B, T, H, hd); u: (H, hd) -> (B, T, H, hd)."""
+    B, T, H, hd = r.shape
+    block_t = min(block_t, T)
+    T_pad = math.ceil(T / block_t) * block_t
+    if T_pad != T:
+        pad = ((0, 0), (0, T_pad - T), (0, 0), (0, 0))
+        r, k, v = jnp.pad(r, pad), jnp.pad(k, pad), jnp.pad(v, pad)
+        w = jnp.pad(w, pad, constant_values=1.0)
+
+    # (B, H, T, hd) layout: time blocked, head in grid
+    rt, kt, vt, wt = (x.transpose(0, 2, 1, 3) for x in (r, k, v, w))
+
+    grid = (B, H, T_pad // block_t)
+    spec = pl.BlockSpec((1, 1, block_t, hd), lambda b, h, it: (b, h, it, 0))
+    u_spec = pl.BlockSpec((1, hd), lambda b, h, it: (h, 0))
+
+    out = pl.pallas_call(
+        functools.partial(_wkv_kernel, block_t=block_t, seq_len=T),
+        grid=grid,
+        in_specs=[spec, spec, spec, spec, u_spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, T_pad, hd), r.dtype),
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        interpret=interpret,
+    )(rt, kt, vt, wt, u)
+
+    return out.transpose(0, 2, 1, 3)[:, :T]

@@ -1,0 +1,1 @@
+"""Launcher: production meshes, sharding engine, dry-run, train/serve CLIs."""

@@ -1,0 +1,87 @@
+"""Assigned input-shape cells and their abstract input specs.
+
+Every (arch x shape) cell lowers one of three step kinds:
+
+  train_4k     -> train_step   (seq 4096,   global batch 256)
+  prefill_32k  -> prefill_step (seq 32768,  global batch 32)
+  decode_32k   -> decode_step  (KV len 32768, global batch 128)
+  long_500k    -> decode_step  (KV len 524288, global batch 1;
+                                sub-quadratic archs only — DESIGN.md §5)
+
+``input_specs`` returns ShapeDtypeStruct stand-ins (weak-type-correct,
+shardable, zero allocation) plus the logical-axes tree used by the sharding
+engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from ..models.config import ModelConfig
+from ..models.transformer import cache_axes, init_cache
+
+SDS = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524_288, 1, "decode"),
+}
+
+
+def applicable_shapes(cfg: ModelConfig) -> list[str]:
+    out = ["train_4k", "prefill_32k", "decode_32k"]
+    if cfg.runs_long_context:
+        out.append("long_500k")
+    return out
+
+
+def _media_specs(cfg: ModelConfig, batch: int):
+    if cfg.frontend == "vision":
+        return (SDS((batch, cfg.n_frontend_tokens, cfg.d_frontend),
+                    jnp.float32),
+                ("batch", None, None))
+    return None, None
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> tuple[dict, dict]:
+    """Returns (abstract_inputs, logical_axes) for the step function's batch
+    arguments."""
+    cell = SHAPES[shape_name]
+    B, S = cell.global_batch, cell.seq_len
+    if cell.kind == "train":
+        specs = {"tokens": SDS((B, S), jnp.int32),
+                 "labels": SDS((B, S), jnp.int32),
+                 "mask": SDS((B, S), jnp.float32)}
+        axes = {"tokens": ("batch", "seq"), "labels": ("batch", "seq"),
+                "mask": ("batch", "seq")}
+    elif cell.kind == "prefill":
+        specs = {"tokens": SDS((B, S), jnp.int32)}
+        axes = {"tokens": ("batch", "seq")}
+    else:  # decode: one new token against a KV/recurrent cache of length S
+        specs = {"tokens": SDS((B, 1), jnp.int32),
+                 "pos": SDS((), jnp.int32)}
+        axes = {"tokens": ("batch", None), "pos": ()}
+    media, media_axes = _media_specs(cfg, B)
+    if media is not None:
+        specs["media"] = media
+        axes["media"] = media_axes
+    return specs, axes
+
+
+def decode_cache_specs(cfg: ModelConfig, shape_name: str) -> tuple[dict, dict]:
+    cell = SHAPES[shape_name]
+    cache = init_cache(cfg, cell.global_batch, cell.seq_len, abstract=True)
+    return cache, cache_axes(cfg)

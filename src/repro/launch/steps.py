@@ -1,0 +1,68 @@
+"""Step-function builders shared by train.py, serve.py and dryrun.py.
+
+``make_train_step`` supports the two synchronization modes (the sharding
+difference is applied by the caller via in_shardings — see sync_jax) and
+the delta-staleness engine; the step function itself is mode-agnostic pure
+dataflow, exactly as Theorem 2 requires: correctness is enforced by the
+read/write (all-gather / reduce-scatter) dependency structure, not by the
+step code.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..core.staleness import DelayedState, init_delayed_state, make_delayed_step
+from ..core.sync_jax import SyncConfig
+from ..models.config import ModelConfig
+from ..models.transformer import decode_step as model_decode
+from ..models.transformer import lm_loss, prefill
+from ..optim.optimizers import Optimizer
+
+
+def make_train_step(cfg: ModelConfig, opt: Optimizer, sync: SyncConfig,
+                    act_specs: dict | None = None) -> Callable:
+    """(params, opt_state, batch) -> (params, opt_state, metrics)."""
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lm_loss, has_aux=True)(params, batch, cfg, remat=sync.remat,
+                                   act_specs=act_specs)
+        new_params, new_opt = opt.update(grads, opt_state, params)
+        metrics = dict(metrics)
+        return new_params, new_opt, metrics
+    return train_step
+
+
+def make_delayed_train_step(cfg: ModelConfig, opt: Optimizer,
+                            sync: SyncConfig) -> Callable:
+    """Delta-staleness variant: (DelayedState, batch) -> (DelayedState, mx)."""
+    def grad_fn(params, batch):
+        (loss, _), grads = jax.value_and_grad(
+            lm_loss, has_aux=True)(params, batch, cfg, remat=sync.remat)
+        return loss, grads
+
+    delay_for = sync.delay_for if sync.group_delays else None
+    return make_delayed_step(grad_fn, opt.update, sync.delta, delay_for)
+
+
+def make_prefill_step(cfg: ModelConfig, cache_len: int,
+                      remat: str = "none",
+                      act_specs: dict | None = None) -> Callable:
+    def prefill_step(params, batch):
+        return prefill(params, batch["tokens"], cfg, cache_len=cache_len,
+                       media=batch.get("media"), remat=remat,
+                       act_specs=act_specs)
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig,
+                     act_specs: dict | None = None) -> Callable:
+    def serve_step(params, cache, batch):
+        logits, new_cache = model_decode(params, cache, batch["tokens"],
+                                         batch["pos"], cfg,
+                                         media=batch.get("media"),
+                                         act_specs=act_specs)
+        return logits, new_cache
+    return serve_step

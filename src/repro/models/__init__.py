@@ -1,0 +1,14 @@
+"""Model zoo: composable block-group transformers + the paper's own model.
+
+  config      — ModelConfig / BlockGroup
+  paramlib    — P-spec trees (init / abstract / axes from one source)
+  layers      — norms, RoPE, MLPs, embeddings
+  attention   — GQA / sliding-window / cross attention + KV caches
+  moe         — grouped einsum top-k mixture of experts
+  rwkv6       — RWKV-6 time mix / channel mix
+  rglru       — Griffin RG-LRU recurrent block
+  transformer — composition: forward / lm_loss / prefill / decode_step
+  regression  — the paper's linear-regression prototype task
+"""
+from .config import BlockGroup, ModelConfig  # noqa: F401
+from . import paramlib, transformer  # noqa: F401

@@ -1,0 +1,169 @@
+"""Self/cross attention with GQA, sliding windows, RoPE and KV caches.
+
+Three entry points per layer kind:
+  * ``attention_fwd``   — full-sequence training/prefill forward
+  * ``attention_decode`` — single-token decode against a KV cache
+  * cross-attention variants for the vision frontend
+
+The softmax path dispatches through :mod:`repro.kernels.ops` so the Pallas
+flash kernel (TPU target) and the jnp reference share one call site.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import apply_rope, rmsnorm
+from .paramlib import P
+from ..kernels import ops as kops
+
+
+def attn_specs(cfg: ModelConfig, kind: str,
+               stack: tuple[int, ...] = ()) -> dict:
+    lead = ("layers",) * len(stack)
+    d, hd = cfg.d_model, cfg.hd
+    nq, nkv = cfg.n_heads, cfg.n_kv_heads
+    specs = {
+        "wq": P(stack + (d, nq * hd), lead + ("embed", "heads")),
+        "wk": P(stack + (d, nkv * hd), lead + ("embed", "kv_heads")),
+        "wv": P(stack + (d, nkv * hd), lead + ("embed", "kv_heads")),
+        "wo": P(stack + (nq * hd, d), lead + ("heads", "embed")),
+    }
+    if kind == "xattn":  # keys/values come from frontend tokens (same width
+        # post-projection); gating scalars stabilize late fusion
+        specs["gate"] = P(stack + (1,), lead + (None,), init="zeros")
+    if cfg.qk_norm:
+        specs["q_norm"] = P(stack + (hd,), lead + (None,), init="ones")
+        specs["k_norm"] = P(stack + (hd,), lead + (None,), init="ones")
+    return specs
+
+
+def _split_heads(x: jnp.ndarray, n: int, hd: int) -> jnp.ndarray:
+    return x.reshape(x.shape[:-1] + (n, hd))
+
+
+def _merge_heads(x: jnp.ndarray) -> jnp.ndarray:
+    return x.reshape(x.shape[:-2] + (x.shape[-2] * x.shape[-1],))
+
+
+def _rope_theta(cfg: ModelConfig, kind: str) -> float:
+    if kind == "attn" and cfg.rope_theta_global is not None:
+        return cfg.rope_theta_global
+    return cfg.rope_theta
+
+
+def _qkv(params: dict, x: jnp.ndarray, cfg: ModelConfig):
+    dt = x.dtype
+    q = _split_heads(x @ params["wq"].astype(dt), cfg.n_heads, cfg.hd)
+    k = _split_heads(x @ params["wk"].astype(dt), cfg.n_kv_heads, cfg.hd)
+    v = _split_heads(x @ params["wv"].astype(dt), cfg.n_kv_heads, cfg.hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, params["q_norm"])
+        k = rmsnorm(k, params["k_norm"])
+    return q, k, v
+
+
+def attention_fwd(params: dict, x: jnp.ndarray, cfg: ModelConfig,
+                  kind: str, positions: jnp.ndarray) -> jnp.ndarray:
+    """Full-sequence causal attention.  x: (B, S, d)."""
+    q, k, v = _qkv(params, x, cfg)
+    theta = _rope_theta(cfg, kind)
+    q = apply_rope(q, positions, theta)
+    k = apply_rope(k, positions, theta)
+    window = cfg.window if kind in ("local", "swa") else 0
+    out = kops.attention(q, k, v, causal=True, window=window)
+    return _merge_heads(out) @ params["wo"].astype(x.dtype)
+
+
+def cross_attention_fwd(params: dict, x: jnp.ndarray, media: jnp.ndarray,
+                        cfg: ModelConfig) -> jnp.ndarray:
+    """Cross-attention: queries from text x (B,S,d), keys/values from
+    projected frontend tokens media (B,N,d).  Tanh-gated (llama-vision)."""
+    dt = x.dtype
+    q = _split_heads(x @ params["wq"].astype(dt), cfg.n_heads, cfg.hd)
+    k = _split_heads(media @ params["wk"].astype(dt), cfg.n_kv_heads, cfg.hd)
+    v = _split_heads(media @ params["wv"].astype(dt), cfg.n_kv_heads, cfg.hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, params["q_norm"])
+        k = rmsnorm(k, params["k_norm"])
+    out = kops.attention(q, k, v, causal=False, window=0)
+    out = _merge_heads(out) @ params["wo"].astype(dt)
+    return jnp.tanh(params["gate"].astype(jnp.float32)).astype(dt) * out
+
+
+# ---------------------------------------------------------------------------
+# KV-cache decode
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(cfg: ModelConfig, kind: str, batch: int, cache_len: int,
+                  stack: tuple[int, ...] = (), abstract: bool = False):
+    """Cache layout: k/v (stack..., B, L, n_kv, hd); L is a ring buffer for
+    windowed kinds.  Activation logical axes: batch / kv_seq / kv_heads."""
+    L = cache_len if kind in ("attn", ) else min(cfg.window or cache_len,
+                                                 cache_len)
+    shape = stack + (batch, L, cfg.n_kv_heads, cfg.hd)
+    if abstract:
+        arr = jax.ShapeDtypeStruct(shape, cfg.dtype)
+    else:
+        arr = jnp.zeros(shape, cfg.dtype)
+    return {"k": arr, "v": arr}
+
+
+def kv_cache_axes(kind: str, stack_dims: int = 0):
+    lead = ("layers",) * stack_dims
+    ax = lead + ("batch", "kv_seq", "kv_heads", None)
+    return {"k": ax, "v": ax}
+
+
+def attention_decode(params: dict, x: jnp.ndarray, cache: dict,
+                     cfg: ModelConfig, kind: str,
+                     pos: jnp.ndarray) -> tuple[jnp.ndarray, dict]:
+    """One-token decode.  x: (B, 1, d); pos: scalar int32 (current position).
+    Returns (out (B,1,d), updated cache)."""
+    q, k_new, v_new = _qkv(params, x, cfg)
+    theta = _rope_theta(cfg, kind)
+    posv = pos[None] if pos.ndim == 0 else pos
+    q = apply_rope(q, jnp.broadcast_to(posv, (x.shape[0], 1)), theta)
+    k_new = apply_rope(k_new, jnp.broadcast_to(posv, (x.shape[0], 1)), theta)
+
+    L = cache["k"].shape[1]
+    slot = jnp.mod(pos, L)                      # ring buffer for windowed
+    k = _dyn_update(cache["k"], k_new, slot)
+    v = _dyn_update(cache["v"], v_new, slot)
+
+    # positions of cache entries (for masking): entry at index i holds
+    # absolute position p with p % L == i, p <= pos, p > pos - L.
+    idx = jnp.arange(L)
+    abs_pos = pos - jnp.mod(pos - idx, L)       # absolute position per slot
+    valid = (abs_pos >= 0) & (abs_pos >= pos - (L - 1))
+    if kind in ("local", "swa") and cfg.window:
+        valid &= abs_pos > pos - cfg.window
+
+    out = kops.attention_decode(q, k, v, valid)
+    out = _merge_heads(out) @ params["wo"].astype(x.dtype)
+    return out, {"k": k, "v": v}
+
+
+def _dyn_update(buf: jnp.ndarray, new: jnp.ndarray,
+                slot: jnp.ndarray) -> jnp.ndarray:
+    """Write the (B,1,n_kv,hd) entry at ring index ``slot`` along axis 1.
+
+    Two lowerings:
+      * default: dynamic_update_slice — minimal HBM traffic, but under a
+        kv_seq-sharded cache GSPMD cannot partition a scatter at a dynamic
+        index and falls back to full rematerialization (replicate + reshard
+        = a giant collective per decode step);
+      * REPRO_ONEHOT_CACHE=1: select(iota == slot, new, buf) — elementwise,
+        partitions perfectly along the sharded seq dim; costs one read+write
+        of the cache instead of a collective.  See EXPERIMENTS.md §Perf.
+    """
+    import os as _os
+    if _os.environ.get("REPRO_ONEHOT_CACHE") == "1":
+        L = buf.shape[1]
+        hit = (jnp.arange(L, dtype=jnp.int32) ==
+               slot.astype(jnp.int32))[None, :, None, None]
+        return jnp.where(hit, new.astype(buf.dtype), buf)
+    start = (jnp.zeros((), slot.dtype), slot.astype(jnp.int32),
+             jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32))
+    return jax.lax.dynamic_update_slice(buf, new.astype(buf.dtype), start)

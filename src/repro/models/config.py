@@ -1,0 +1,137 @@
+"""Model configuration shared by all architectures in the zoo.
+
+A model is a list of **block groups**; each group is a repeating pattern of
+layer kinds applied ``n`` times via ``jax.lax.scan`` over stacked parameters
+(small HLO, fast compile, remat-friendly).  Layer kinds:
+
+  attn    — global causal self-attention (GQA)
+  local   — sliding-window causal self-attention (bounded KV)
+  swa     — alias of local (mixtral-style sliding window)
+  xattn   — cross-attention to modality tokens (vision frontend stub)
+  rwkv6   — RWKV-6 token-shift + data-dependent-decay WKV mixer
+  rglru   — Griffin RG-LRU recurrent block (conv1d + gated linear recurrence)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax.numpy as jnp
+
+ATTN_KINDS = ("attn", "local", "swa", "xattn")
+RECURRENT_KINDS = ("rwkv6", "rglru")
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockGroup:
+    pattern: tuple[str, ...]   # layer kinds within one scanned super-block
+    n: int                     # scan length (number of pattern repetitions)
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.pattern) * self.n
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                       # dense | moe | ssm | hybrid | vlm | audio
+    groups: tuple[BlockGroup, ...]
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int | None = None       # default d_model // n_heads
+    window: int = 0                   # sliding window for local/swa kinds
+    rope_theta: float = 10_000.0
+    rope_theta_global: float | None = None   # gemma3: distinct global theta
+    norm: str = "rmsnorm"             # rmsnorm | layernorm | layernorm_np
+    qk_norm: bool = False             # gemma3-style per-head q/k rmsnorm
+    mlp: str = "swiglu"               # swiglu | geglu | gelu
+    tie_embeddings: bool = True
+    embed_scale: bool = False         # gemma: scale embeddings by sqrt(d)
+    logit_softcap: float = 0.0
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    moe_group_size: int = 1024        # dispatch group size (tokens)
+    router_aux_coef: float = 0.01
+    router_z_coef: float = 1e-3
+    # --- recurrent (rwkv6 / rglru) ---
+    d_rnn: int = 0                    # rglru recurrence width (default d_model)
+    conv_width: int = 4               # rglru temporal conv width
+    decay_lora: int = 64              # rwkv6 data-dependent decay rank
+    # --- modality frontend stubs ---
+    frontend: str | None = None       # None | "vision" | "audio_tokens"
+    n_frontend_tokens: int = 0        # e.g. vision patch count
+    d_frontend: int = 0               # raw patch embedding width
+    # --- numerics / training ---
+    dtype: Any = jnp.bfloat16
+    param_dtype: Any = jnp.float32    # master copy
+    max_seq: int = 8192
+    # --- shape-cell policy ---
+    long_context: bool | None = None  # run long_500k? None = derive
+    # --- notes for DESIGN.md traceability ---
+    source: str = ""
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def n_layers(self) -> int:
+        return sum(g.n_layers for g in self.groups)
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    @property
+    def rnn_width(self) -> int:
+        return self.d_rnn or self.d_model
+
+    @property
+    def layer_kinds(self) -> tuple[str, ...]:
+        out: list[str] = []
+        for g in self.groups:
+            out.extend(g.pattern * g.n)
+        return tuple(out)
+
+    def kv_cache_len(self, kind: str, seq_len: int) -> int:
+        """Per-layer KV length needed to decode with ``seq_len`` context."""
+        if kind in ("local", "swa"):
+            return min(self.window, seq_len) if self.window else seq_len
+        return seq_len
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True if no layer needs an unbounded full-attention KV cache —
+        the criterion for running the long_500k shape cell."""
+        kinds = set(self.layer_kinds)
+        if "attn" in kinds or "xattn" in kinds:
+            return False
+        return all(k in ("rwkv6", "rglru") or
+                   (k in ("local", "swa") and self.window > 0)
+                   for k in kinds)
+
+    @property
+    def runs_long_context(self) -> bool:
+        """Whether the long_500k shape cell applies (see DESIGN.md §5)."""
+        if self.long_context is not None:
+            return self.long_context
+        return self.sub_quadratic
+
+    def validate(self) -> None:
+        assert self.d_model % self.n_heads == 0 or self.head_dim, self.name
+        assert self.n_heads % self.n_kv_heads == 0, self.name
+        if self.is_moe:
+            assert 0 < self.top_k <= self.n_experts, self.name
+        for g in self.groups:
+            for k in g.pattern:
+                assert k in ATTN_KINDS + RECURRENT_KINDS, (self.name, k)
+                if k in ("local", "swa"):
+                    assert self.window > 0, self.name
+        if self.frontend == "vision":
+            assert self.n_frontend_tokens > 0 and self.d_frontend > 0

@@ -1,0 +1,146 @@
+"""Shared neural building blocks: norms, RoPE, embeddings, gated MLPs.
+
+All forwards take an explicit params dict (pure functions), compute norms and
+softmaxes in float32, and return activations in the model compute dtype.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .paramlib import P
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def norm_specs(cfg: ModelConfig, stack: tuple[int, ...] = ()) -> dict:
+    """Parameter specs for one norm layer (possibly scan-stacked)."""
+    lead_axes = ("layers",) * len(stack)
+    if cfg.norm == "layernorm_np":      # olmo: non-parametric — no params
+        return {}
+    d = {"scale": P(stack + (cfg.d_model,), lead_axes + (None,), init="ones")}
+    if cfg.norm == "layernorm":
+        d["bias"] = P(stack + (cfg.d_model,), lead_axes + (None,), init="zeros")
+    return d
+
+
+def apply_norm(params: dict, x: jnp.ndarray, cfg: ModelConfig,
+               eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "rmsnorm":
+        rms = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+        out = xf * rms
+        if params:
+            out = out * params["scale"].astype(jnp.float32)
+        return out.astype(x.dtype)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mean) * jax.lax.rsqrt(var + eps)
+    if cfg.norm == "layernorm":
+        out = out * params["scale"].astype(jnp.float32) \
+            + params["bias"].astype(jnp.float32)
+    # layernorm_np (olmo): no affine transform
+    return out.astype(x.dtype)
+
+
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray | None = None,
+            eps: float = 1e-6) -> jnp.ndarray:
+    """Standalone rmsnorm (qk-norm, rwkv group-norm) in f32."""
+    xf = x.astype(jnp.float32)
+    rms = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    out = xf * rms
+    if scale is not None:
+        out = out * scale.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float) -> jnp.ndarray:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                       # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (.., S, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]                    # (.., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin,
+                           x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP
+# ---------------------------------------------------------------------------
+
+def mlp_specs(cfg: ModelConfig, stack: tuple[int, ...] = ()) -> dict:
+    lead = ("layers",) * len(stack)
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.mlp in ("swiglu", "geglu"):
+        return {
+            "wg": P(stack + (d, f), lead + ("embed", "ffn")),
+            "wu": P(stack + (d, f), lead + ("embed", "ffn")),
+            "wd": P(stack + (f, d), lead + ("ffn", "embed")),
+        }
+    return {  # plain gelu MLP
+        "wu": P(stack + (d, f), lead + ("embed", "ffn")),
+        "wd": P(stack + (f, d), lead + ("ffn", "embed")),
+    }
+
+
+def apply_mlp(params: dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    if cfg.mlp in ("swiglu", "geglu"):
+        act = jax.nn.silu if cfg.mlp == "swiglu" else \
+            (lambda v: jax.nn.gelu(v, approximate=True))
+        g = act(x @ params["wg"].astype(x.dtype))
+        u = x @ params["wu"].astype(x.dtype)
+        return (g * u) @ params["wd"].astype(x.dtype)
+    h = jax.nn.gelu(x @ params["wu"].astype(x.dtype), approximate=True)
+    return h @ params["wd"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+
+def embed_specs(cfg: ModelConfig) -> dict:
+    # std 0.02 (GPT-2 convention): with a tied LM head the logit variance is
+    # d_model * std^2 — std 1.0 would give ~sqrt(d) logits and a wildly
+    # inflated initial loss
+    specs = {"embedding": P((cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+                            scale=0.02)}
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = P((cfg.d_model, cfg.vocab_size), ("embed", "vocab"))
+    return specs
+
+
+def embed_tokens(params: dict, tokens: jnp.ndarray,
+                 cfg: ModelConfig) -> jnp.ndarray:
+    x = params["embedding"].astype(cfg.dtype)[tokens]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.dtype)
+    return x
+
+
+def lm_logits(params: dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    if cfg.tie_embeddings:
+        w = params["embedding"].astype(cfg.dtype).T
+    else:
+        w = params["lm_head"].astype(cfg.dtype)
+    logits = x @ w
+    if cfg.logit_softcap > 0:
+        c = cfg.logit_softcap
+        logits = jnp.tanh(logits.astype(jnp.float32) / c) * c
+        return logits
+    return logits.astype(jnp.float32)

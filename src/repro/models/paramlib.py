@@ -1,0 +1,87 @@
+"""Parameter specification trees.
+
+A model describes its parameters once, as a pytree of :class:`P` specs
+(shape + logical sharding axes + initializer).  From that single source of
+truth we derive:
+
+  * ``init_tree``      — materialized parameters (rng init, real arrays)
+  * ``abstract_tree``  — ``jax.ShapeDtypeStruct`` stand-ins (dry-run, no
+    allocation)
+  * ``axes_tree``      — logical-axis tuples, consumed by the sharding
+    engine (:mod:`repro.launch.sharding`)
+
+Logical axis names are documented in :mod:`repro.core.sync_jax`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class P:
+    """Spec for one parameter tensor."""
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]            # logical axis name per dim
+    init: str = "normal"                    # normal | zeros | ones | scaled
+    scale: float | None = None              # stddev; default 1/sqrt(fan_in)
+    fan_in_dim: int = -2                    # which dim is fan-in for scaling
+    dtype: Any = None                       # override model dtype
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"shape {self.shape} / axes {self.axes} mismatch")
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, P)
+
+
+def _std(spec: P) -> float:
+    if spec.scale is not None:
+        return spec.scale
+    fan_in = spec.shape[spec.fan_in_dim] if spec.shape else 1
+    return 1.0 / math.sqrt(max(fan_in, 1))
+
+
+def init_tree(specs, key: jax.Array, dtype=jnp.float32):
+    """Materialize parameters.  Deterministic per-leaf keys derived by path."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=_is_spec)
+    keys = jax.random.split(key, max(len(leaves), 1))
+
+    def make(spec: P, k):
+        dt = spec.dtype or dtype
+        if spec.init == "zeros":
+            return jnp.zeros(spec.shape, dt)
+        if spec.init == "ones":
+            return jnp.ones(spec.shape, dt)
+        return (jax.random.normal(k, spec.shape, jnp.float32)
+                * _std(spec)).astype(dt)
+
+    return jax.tree.unflatten(treedef, [make(s, k) for s, k in zip(leaves, keys)])
+
+
+def abstract_tree(specs, dtype=jnp.float32):
+    """ShapeDtypeStruct stand-ins — no device allocation (dry-run path)."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype or dtype),
+        specs, is_leaf=_is_spec)
+
+
+def axes_tree(specs):
+    """The logical-axes pytree with the same structure as the params."""
+    return jax.tree.map(lambda s: s.axes, specs, is_leaf=_is_spec)
+
+
+def param_count(specs) -> int:
+    return sum(math.prod(s.shape)
+               for s in jax.tree.leaves(specs, is_leaf=_is_spec))
+
+
+def param_bytes(specs, dtype=jnp.bfloat16) -> int:
+    itemsize = jnp.dtype(dtype).itemsize
+    return param_count(specs) * itemsize

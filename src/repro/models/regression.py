@@ -1,0 +1,44 @@
+"""The paper's own prototype model: linear regression in JAX.
+
+Feature-partitioned exactly as in Sec 6: the parameter vector theta is split
+into p chunks (the partition set Pi); each chunk's update is the paper's
+f_i — a deterministic function of the full-theta snapshot.  Used by the
+paper-reproduction example and the JAX-engine equivalence tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_theta(n_features: int) -> jnp.ndarray:
+    return jnp.zeros((n_features,), jnp.float32)
+
+
+def loss(theta: jnp.ndarray, X: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    r = X @ theta - y
+    return 0.5 * jnp.mean(r * r)
+
+
+def grad_step(theta: jnp.ndarray, X: jnp.ndarray, y: jnp.ndarray,
+              lr: float) -> jnp.ndarray:
+    """One full-batch GD step (all chunk updates from the same snapshot —
+    Algorithm 1 semantics)."""
+    g = jax.grad(loss)(theta, X, y)
+    return theta - lr * g
+
+
+def chunked_grad_step(theta: jnp.ndarray, X: jnp.ndarray, y: jnp.ndarray,
+                      lr: float, n_chunks: int) -> jnp.ndarray:
+    """The same step computed partition-by-partition (worker view): each
+    chunk's gradient uses the shared snapshot.  Identical result to
+    grad_step — asserted in tests (the paper's sequential-correctness)."""
+    resid = X @ theta - y
+    n = X.shape[0]
+    bounds = jnp.linspace(0, theta.shape[0], n_chunks + 1).astype(int)
+    parts = []
+    for i in range(n_chunks):
+        sl = slice(int(bounds[i]), int(bounds[i + 1]))
+        g = X[:, sl].T @ resid / n
+        parts.append(theta[sl] - lr * g)
+    return jnp.concatenate(parts)

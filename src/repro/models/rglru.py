@@ -1,0 +1,102 @@
+"""Griffin recurrent block: causal conv1d + RG-LRU gated linear recurrence.
+arXiv:2402.19427 (RecurrentGemma uses this block 2:1 with local attention).
+
+    branch_y = GeLU(x W_y)
+    u        = x W_x ; u = CausalConv1d(u, width)
+    a_t      = exp(-c * softplus(Lambda) * sigmoid(u W_a + b_a))
+    i_t      = sigmoid(u W_i + b_i)
+    h_t      = a_t h_{t-1} + sqrt(1-a_t^2) (i_t * u_t)
+    out      = (branch_y * h) W_o
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .paramlib import P
+from ..kernels import ops as kops
+
+_C = 8.0  # Griffin's fixed decay sharpness constant
+
+
+def rglru_specs(cfg: ModelConfig, stack: tuple[int, ...] = ()) -> dict:
+    lead = ("layers",) * len(stack)
+    d, dr, cw = cfg.d_model, cfg.rnn_width, cfg.conv_width
+    return {
+        "wy": P(stack + (d, dr), lead + ("embed", "ffn")),
+        "wx": P(stack + (d, dr), lead + ("embed", "ffn")),
+        "conv_w": P(stack + (cw, dr), lead + (None, "ffn"), scale=0.1),
+        "conv_b": P(stack + (dr,), lead + ("ffn",), init="zeros"),
+        "wa": P(stack + (dr, dr), lead + ("ffn", "ffn2"), scale=0.01),
+        "ba": P(stack + (dr,), lead + ("ffn",), init="zeros"),
+        "wi": P(stack + (dr, dr), lead + ("ffn", "ffn2"), scale=0.01),
+        "bi": P(stack + (dr,), lead + ("ffn",), init="zeros"),
+        "lam": P(stack + (dr,), lead + ("ffn",), scale=0.5),
+        "wo": P(stack + (dr, d), lead + ("ffn", "embed")),
+    }
+
+
+def _causal_conv(u: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 carry: jnp.ndarray | None) -> jnp.ndarray:
+    """Depthwise causal conv over time.  u: (B, T, dr); w: (cw, dr);
+    carry: (B, cw-1, dr) previous inputs (decode) or None (zeros)."""
+    cw = w.shape[0]
+    if carry is None:
+        up = jnp.pad(u, ((0, 0), (cw - 1, 0), (0, 0)))
+    else:
+        up = jnp.concatenate([carry.astype(u.dtype), u], axis=1)
+    out = jnp.zeros_like(u)
+    for i in range(cw):
+        out = out + up[:, i:i + u.shape[1]] * w[i].astype(u.dtype)
+    return out + b.astype(u.dtype)
+
+
+def _gates(p: dict, u: jnp.ndarray):
+    uf = u.astype(jnp.float32)
+    ra = jax.nn.sigmoid(uf @ p["wa"].astype(jnp.float32)
+                        + p["ba"].astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * ra
+    a = jnp.exp(log_a)
+    i = jax.nn.sigmoid(uf @ p["wi"].astype(jnp.float32)
+                       + p["bi"].astype(jnp.float32))
+    return a.astype(u.dtype), i.astype(u.dtype)
+
+
+def rglru_fwd(p: dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    dt = x.dtype
+    y = jax.nn.gelu(x @ p["wy"].astype(dt), approximate=True)
+    u = _causal_conv(x @ p["wx"].astype(dt), p["conv_w"], p["conv_b"], None)
+    a, i = _gates(p, u)
+    h = kops.rglru(i * u, a)
+    return (y * h) @ p["wo"].astype(dt)
+
+
+def rglru_decode(p: dict, x: jnp.ndarray, state: dict,
+                 cfg: ModelConfig) -> tuple[jnp.ndarray, dict]:
+    """x: (B, 1, d); state: {'h': (B, dr) f32, 'conv': (B, cw-1, dr)}."""
+    dt = x.dtype
+    y = jax.nn.gelu(x @ p["wy"].astype(dt), approximate=True)
+    u_in = x @ p["wx"].astype(dt)
+    u = _causal_conv(u_in, p["conv_w"], p["conv_b"], state["conv"])
+    a, i = _gates(p, u)
+    h_seq, hT = kops.rglru_stateful(i * u, a, state["h"])
+    out = (y * h_seq) @ p["wo"].astype(dt)
+    new_conv = jnp.concatenate([state["conv"][:, 1:],
+                                u_in.astype(state["conv"].dtype)], axis=1)
+    return out, {"h": hT, "conv": new_conv}
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int,
+                     stack: tuple[int, ...] = (), abstract: bool = False):
+    dr, cw = cfg.rnn_width, cfg.conv_width
+    shapes = {"h": (stack + (batch, dr), jnp.float32),
+              "conv": (stack + (batch, cw - 1, dr), cfg.dtype)}
+    if abstract:
+        return {k: jax.ShapeDtypeStruct(s, t) for k, (s, t) in shapes.items()}
+    return {k: jnp.zeros(s, t) for k, (s, t) in shapes.items()}
+
+
+def rglru_state_axes(stack_dims: int = 0):
+    lead = ("layers",) * stack_dims
+    return {"h": lead + ("batch", None), "conv": lead + ("batch", None, None)}

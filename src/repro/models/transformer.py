@@ -1,0 +1,494 @@
+"""Model composition: block groups scanned over stacked parameters.
+
+Entry points (all pure functions over a params pytree):
+
+  model_specs(cfg)                         -> P-spec tree (single source of truth)
+  forward(params, tokens, cfg, ...)        -> (logits, aux)        [train path]
+  lm_loss(params, batch, cfg, ...)         -> (loss, metrics)
+  prefill(params, tokens, cfg, ...)        -> (last_logits, cache) [serve path]
+  decode_step(params, cache, tokens, pos, cfg, ...) -> (logits, cache)
+  init_cache(cfg, batch, cache_len, ...)   -> cache pytree (+ axes via cache_axes)
+
+Layers are grouped into scan super-blocks (ModelConfig.groups); parameters of
+each slot are stacked (n, ...) so the HLO contains one unrolled pattern per
+group regardless of depth — this is what keeps 48-layer configs compilable
+on the CPU dry-run host and gives remat a natural boundary.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import moe as moe_mod
+from . import rglru as rglru_mod
+from . import rwkv6 as rwkv_mod
+from .config import BlockGroup, ModelConfig
+from .layers import (apply_mlp, apply_norm, embed_specs, embed_tokens,
+                     lm_logits, mlp_specs, norm_specs)
+from .paramlib import P
+
+AUX_ZERO = {"lb_loss": 0.0, "z_loss": 0.0, "router_entropy": 0.0}
+
+
+# ---------------------------------------------------------------------------
+# Specs
+# ---------------------------------------------------------------------------
+
+def _block_specs(cfg: ModelConfig, kind: str, stack: tuple[int, ...]) -> dict:
+    d: dict[str, Any] = {"ln1": norm_specs(cfg, stack)}
+    if kind in ("attn", "local", "swa", "xattn"):
+        d["mix"] = attn.attn_specs(cfg, kind, stack)
+    elif kind == "rwkv6":
+        both = rwkv_mod.rwkv6_specs(cfg, stack)
+        d["mix"] = both["time"]
+        d["ln2"] = norm_specs(cfg, stack)
+        d["ffn"] = both["chan"]
+        return d
+    elif kind == "rglru":
+        d["mix"] = rglru_mod.rglru_specs(cfg, stack)
+    else:
+        raise ValueError(kind)
+    d["ln2"] = norm_specs(cfg, stack)
+    if cfg.is_moe and kind != "xattn":
+        d["ffn"] = moe_mod.moe_specs(cfg, stack)
+    else:
+        d["ffn"] = mlp_specs(cfg, stack)
+    return d
+
+
+def model_specs(cfg: ModelConfig) -> dict:
+    cfg.validate()
+    specs: dict[str, Any] = dict(embed_specs(cfg))
+    if cfg.frontend == "vision":
+        specs["frontend_proj"] = P((cfg.d_frontend, cfg.d_model),
+                                   (None, "embed"))
+    specs["groups"] = {
+        f"g{gi}": {f"s{si}": _block_specs(cfg, kind, (g.n,))
+                   for si, kind in enumerate(g.pattern)}
+        for gi, g in enumerate(cfg.groups)}
+    specs["final_norm"] = norm_specs(cfg)
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Block application (shared by train/prefill/decode)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Ctx:
+    positions: jnp.ndarray            # (B, S) absolute positions
+    media: jnp.ndarray | None = None  # (B, N, d) projected frontend tokens
+
+
+def _wsc(x: jnp.ndarray, act_specs: dict | None, name: str) -> jnp.ndarray:
+    """Optional activation sharding constraint (SPMD path only)."""
+    if act_specs and name in act_specs:
+        return jax.lax.with_sharding_constraint(x, act_specs[name])
+    return x
+
+
+def _apply_mix(bp: dict, kind: str, h: jnp.ndarray, cfg: ModelConfig,
+               ctx: Ctx) -> jnp.ndarray:
+    if kind in ("attn", "local", "swa"):
+        return attn.attention_fwd(bp["mix"], h, cfg, kind, ctx.positions)
+    if kind == "xattn":
+        return attn.cross_attention_fwd(bp["mix"], h, ctx.media, cfg)
+    if kind == "rwkv6":
+        return rwkv_mod.time_mix_fwd(bp["mix"], h, cfg)
+    if kind == "rglru":
+        return rglru_mod.rglru_fwd(bp["mix"], h, cfg)
+    raise ValueError(kind)
+
+
+def _apply_ffn(bp: dict, kind: str, h: jnp.ndarray,
+               cfg: ModelConfig) -> tuple[jnp.ndarray, dict]:
+    if kind == "rwkv6":
+        return rwkv_mod.chan_mix_fwd(bp["ffn"], h, cfg), dict(AUX_ZERO)
+    if cfg.is_moe and kind != "xattn":
+        return moe_mod.moe_ffn(bp["ffn"], h, cfg)
+    return apply_mlp(bp["ffn"], h, cfg), dict(AUX_ZERO)
+
+
+def _apply_block(bp: dict, kind: str, x: jnp.ndarray, cfg: ModelConfig,
+                 ctx: Ctx) -> tuple[jnp.ndarray, dict]:
+    h = apply_norm(bp["ln1"], x, cfg)
+    x = x + _apply_mix(bp, kind, h, cfg, ctx)
+    h2 = apply_norm(bp["ln2"], x, cfg)
+    f, aux = _apply_ffn(bp, kind, h2, cfg)
+    return x + f, aux
+
+
+def _merge_aux(acc: dict, new: dict) -> dict:
+    return {k: acc[k] + new[k] for k in acc}
+
+
+# ---------------------------------------------------------------------------
+# Train / prefill forward
+# ---------------------------------------------------------------------------
+
+def _remat_wrap(fn, remat: str):
+    if remat == "none":
+        return fn
+    if remat == "full":
+        return jax.checkpoint(fn)
+    if remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    raise ValueError(f"unknown remat policy {remat!r}")
+
+
+def forward(params: dict, tokens: jnp.ndarray, cfg: ModelConfig,
+            media: jnp.ndarray | None = None,
+            remat: str = "none",
+            act_specs: dict | None = None) -> tuple[jnp.ndarray, dict]:
+    """Full-sequence forward.  tokens: (B, S) int32 -> logits (B, S, V) f32."""
+    B, S = tokens.shape
+    x = embed_tokens(params, tokens, cfg)
+    x = _wsc(x, act_specs, "act")
+    ctx = Ctx(positions=jnp.broadcast_to(jnp.arange(S)[None], (B, S)))
+    if cfg.frontend == "vision":
+        ctx.media = media.astype(cfg.dtype) @ \
+            params["frontend_proj"].astype(cfg.dtype)
+
+    aux = {k: jnp.zeros((), jnp.float32) for k in AUX_ZERO}
+    for gi, g in enumerate(cfg.groups):
+        gp = params["groups"][f"g{gi}"]
+
+        def body(carry, slot_params, _g=g):
+            xc, auxc = carry
+            xc = _wsc(xc, act_specs, "act")
+            for si, kind in enumerate(_g.pattern):
+                xc, a = _apply_block(slot_params[f"s{si}"], kind, xc, cfg, ctx)
+                auxc = _merge_aux(auxc, {k: jnp.asarray(v, jnp.float32)
+                                         for k, v in a.items()})
+            return (xc, auxc), None
+
+        (x, aux), _ = jax.lax.scan(_remat_wrap(body, remat), (x, aux), gp)
+
+    x = apply_norm(params["final_norm"], x, cfg)
+    return _wsc(lm_logits(params, x, cfg), act_specs, "logits"), aux
+
+
+def _forward_hidden(params, tokens, cfg, media=None, remat="none",
+                    act_specs=None):
+    """forward() without the final norm / LM head (used by chunked CE)."""
+    B, S = tokens.shape
+    x = embed_tokens(params, tokens, cfg)
+    x = _wsc(x, act_specs, "act")
+    ctx = Ctx(positions=jnp.broadcast_to(jnp.arange(S)[None], (B, S)))
+    if cfg.frontend == "vision":
+        ctx.media = media.astype(cfg.dtype) @ \
+            params["frontend_proj"].astype(cfg.dtype)
+    aux = {k: jnp.zeros((), jnp.float32) for k in AUX_ZERO}
+    for gi, g in enumerate(cfg.groups):
+        gp = params["groups"][f"g{gi}"]
+
+        def body(carry, slot_params, _g=g):
+            xc, auxc = carry
+            xc = _wsc(xc, act_specs, "act")
+            for si, kind in enumerate(_g.pattern):
+                xc, a = _apply_block(slot_params[f"s{si}"], kind, xc, cfg,
+                                     ctx)
+                auxc = _merge_aux(auxc, {k: jnp.asarray(v, jnp.float32)
+                                         for k, v in a.items()})
+            return (xc, auxc), None
+
+        (x, aux), _ = jax.lax.scan(_remat_wrap(body, remat), (x, aux), gp)
+    return x, aux
+
+
+def _lm_loss_chunked(params: dict, batch: dict, cfg: ModelConfig,
+                     remat: str, act_specs: dict | None,
+                     n_chunks: int = 8) -> tuple[jnp.ndarray, dict]:
+    """CE computed over sequence chunks: the (B, S, V) logits / one-hot
+    tensors never materialize — peak loss-block memory drops by n_chunks at
+    the cost of scanning the LM-head projection (beyond-paper optimization;
+    see EXPERIMENTS.md §Perf)."""
+    B, S = batch["tokens"].shape
+    hidden, aux = _forward_hidden(params, batch["tokens"], cfg,
+                                  media=batch.get("media"), remat=remat,
+                                  act_specs=act_specs)
+    x = apply_norm(params["final_norm"], hidden, cfg)
+    mask = batch.get("mask")
+    if mask is None:
+        mask = jnp.ones((B, S), jnp.float32)
+    n_chunks = min(n_chunks, S)
+    while S % n_chunks != 0:
+        n_chunks -= 1
+    c = S // n_chunks
+    xs = jnp.moveaxis(x.reshape(B, n_chunks, c, x.shape[-1]), 1, 0)
+    ls = jnp.moveaxis(batch["labels"].reshape(B, n_chunks, c), 1, 0)
+    ms = jnp.moveaxis(mask.reshape(B, n_chunks, c), 1, 0)
+
+    def chunk(carry, inp):
+        xc, lc, mc = inp
+        logits = lm_logits(params, xc, cfg).astype(jnp.float32)
+        logits = _wsc(logits, act_specs, "logits")
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        onehot = jax.nn.one_hot(lc, cfg.vocab_size, dtype=jnp.float32)
+        onehot = _wsc(onehot, act_specs, "logits")
+        nll = lse - jnp.sum(logits * onehot, axis=-1)
+        tot, cnt = carry
+        mf = mc.astype(jnp.float32)
+        return (tot + jnp.sum(nll * mf), cnt + jnp.sum(mf)), None
+
+    (tot, cnt), _ = jax.lax.scan(chunk, (jnp.zeros(()), jnp.zeros(())),
+                                 (xs, ls, ms))
+    loss = tot / jnp.maximum(cnt, 1.0)
+    n_moe = sum(1 for k in cfg.layer_kinds if k != "xattn") \
+        if cfg.is_moe else 1
+    total = (loss
+             + cfg.router_aux_coef * aux["lb_loss"] / n_moe
+             + cfg.router_z_coef * aux["z_loss"] / n_moe)
+    metrics = {"loss": loss, "total_loss": total,
+               "lb_loss": aux["lb_loss"] / n_moe,
+               "router_entropy": aux["router_entropy"] / n_moe}
+    return total, metrics
+
+
+def lm_loss(params: dict, batch: dict, cfg: ModelConfig,
+            remat: str = "none",
+            act_specs: dict | None = None) -> tuple[jnp.ndarray, dict]:
+    """Next-token cross entropy (one-hot formulation: partitions cleanly
+    under vocab sharding).  batch: tokens (B,S), labels (B,S), mask (B,S)."""
+    import os as _os
+    if _os.environ.get("REPRO_CHUNKED_CE") == "1":
+        return _lm_loss_chunked(params, batch, cfg, remat, act_specs)
+    logits, aux = forward(params, batch["tokens"], cfg,
+                          media=batch.get("media"), remat=remat,
+                          act_specs=act_specs)
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)            # (B, S)
+    onehot = jax.nn.one_hot(batch["labels"], cfg.vocab_size,
+                            dtype=jnp.float32)
+    onehot = _wsc(onehot, act_specs, "logits")
+    correct = jnp.sum(logits * onehot, axis=-1)
+    nll = lse - correct
+    mask = batch.get("mask")
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    mask = mask.astype(jnp.float32)
+    loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    n_moe = sum(1 for k in cfg.layer_kinds if k != "xattn") if cfg.is_moe else 1
+    total = (loss
+             + cfg.router_aux_coef * aux["lb_loss"] / n_moe
+             + cfg.router_z_coef * aux["z_loss"] / n_moe)
+    metrics = {"loss": loss, "total_loss": total,
+               "lb_loss": aux["lb_loss"] / n_moe,
+               "router_entropy": aux["router_entropy"] / n_moe}
+    return total, metrics
+
+
+# ---------------------------------------------------------------------------
+# KV / recurrent caches
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int,
+               abstract: bool = False) -> dict:
+    cache: dict[str, Any] = {}
+    for gi, g in enumerate(cfg.groups):
+        slots = {}
+        for si, kind in enumerate(g.pattern):
+            stack = (g.n,)
+            if kind in ("attn", "local", "swa"):
+                L = cfg.kv_cache_len(kind, cache_len)
+                slots[f"s{si}"] = attn.init_kv_cache(
+                    cfg, kind, batch, L, stack, abstract)
+            elif kind == "rwkv6":
+                slots[f"s{si}"] = rwkv_mod.init_rwkv_state(
+                    cfg, batch, stack, abstract)
+            elif kind == "rglru":
+                slots[f"s{si}"] = rglru_mod.init_rglru_state(
+                    cfg, batch, stack, abstract)
+            else:                      # xattn: media is re-derived, stateless
+                slots[f"s{si}"] = {}
+        cache[f"g{gi}"] = slots
+    return cache
+
+
+def cache_axes(cfg: ModelConfig) -> dict:
+    axes: dict[str, Any] = {}
+    for gi, g in enumerate(cfg.groups):
+        slots = {}
+        for si, kind in enumerate(g.pattern):
+            if kind in ("attn", "local", "swa"):
+                slots[f"s{si}"] = attn.kv_cache_axes(kind, 1)
+            elif kind == "rwkv6":
+                slots[f"s{si}"] = rwkv_mod.rwkv_state_axes(1)
+            elif kind == "rglru":
+                slots[f"s{si}"] = rglru_mod.rglru_state_axes(1)
+            else:
+                slots[f"s{si}"] = {}
+        axes[f"g{gi}"] = slots
+    return axes
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def _decode_block(bp: dict, kind: str, x: jnp.ndarray, c: dict,
+                  cfg: ModelConfig, pos: jnp.ndarray,
+                  ctx: Ctx) -> tuple[jnp.ndarray, dict]:
+    h = apply_norm(bp["ln1"], x, cfg)
+    if kind in ("attn", "local", "swa"):
+        mix, c = attn.attention_decode(bp["mix"], h, c, cfg, kind, pos)
+    elif kind == "xattn":
+        mix = attn.cross_attention_fwd(bp["mix"], h, ctx.media, cfg)
+    elif kind == "rwkv6":
+        mix, tc = rwkv_mod.time_mix_decode(
+            bp["mix"], h, {"S": c["S"], "x_last": c["x_last"]}, cfg)
+        c = {**c, **tc}
+    elif kind == "rglru":
+        mix, c = rglru_mod.rglru_decode(bp["mix"], h, c, cfg)
+    x = x + mix
+    h2 = apply_norm(bp["ln2"], x, cfg)
+    if kind == "rwkv6":
+        f = rwkv_mod.chan_mix_fwd(bp["ffn"], h2, cfg, x_last=c["cx_last"])
+        c = {**c, "cx_last": h2[:, -1]}
+    else:
+        f, _ = _apply_ffn(bp, kind, h2, cfg)
+    return x + f, c
+
+
+def decode_step(params: dict, cache: dict, tokens: jnp.ndarray,
+                pos: jnp.ndarray, cfg: ModelConfig,
+                media: jnp.ndarray | None = None,
+                act_specs: dict | None = None
+                ) -> tuple[jnp.ndarray, dict]:
+    """One decode step.  tokens: (B, 1); pos: scalar int32.
+    Returns (logits (B, 1, V) f32, updated cache)."""
+    B = tokens.shape[0]
+    x = embed_tokens(params, tokens, cfg)
+    x = _wsc(x, act_specs, "act")
+    ctx = Ctx(positions=jnp.broadcast_to(pos[None, None], (B, 1)))
+    if cfg.frontend == "vision":
+        ctx.media = media.astype(cfg.dtype) @ \
+            params["frontend_proj"].astype(cfg.dtype)
+
+    new_cache: dict[str, Any] = {}
+    for gi, g in enumerate(cfg.groups):
+        gp = params["groups"][f"g{gi}"]
+
+        def body(xc, slice_, _g=g):
+            slot_params, slot_cache = slice_
+            new_slots = {}
+            for si, kind in enumerate(_g.pattern):
+                xc, nc = _decode_block(slot_params[f"s{si}"], kind, xc,
+                                       slot_cache[f"s{si}"], cfg, pos, ctx)
+                new_slots[f"s{si}"] = nc
+            return xc, new_slots
+
+        x, new_g = jax.lax.scan(body, x, (gp, cache[f"g{gi}"]))
+        new_cache[f"g{gi}"] = new_g
+
+    x = apply_norm(params["final_norm"], x, cfg)
+    return _wsc(lm_logits(params, x, cfg), act_specs, "logits"), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Prefill (forward + cache construction)
+# ---------------------------------------------------------------------------
+
+def _fill_kv(cfg: ModelConfig, kind: str, k: jnp.ndarray, v: jnp.ndarray,
+             cache_len: int) -> dict:
+    """Place full-sequence K/V (B,S,KV,hd) into a ring cache of length L,
+    consistent with the decode-side slot = pos % L convention."""
+    B, S, KV, hd = k.shape
+    L = cfg.kv_cache_len(kind, cache_len)
+    Lp = min(L, S)
+    pos = S - Lp + jnp.arange(Lp)
+    slots = jnp.mod(pos, L)
+    buf_k = jnp.zeros((B, L, KV, hd), k.dtype).at[:, slots].set(k[:, S - Lp:])
+    buf_v = jnp.zeros((B, L, KV, hd), v.dtype).at[:, slots].set(v[:, S - Lp:])
+    return {"k": buf_k, "v": buf_v}
+
+
+def _prefill_block(bp: dict, kind: str, x: jnp.ndarray, cfg: ModelConfig,
+                   ctx: Ctx, cache_len: int) -> tuple[jnp.ndarray, dict]:
+    h = apply_norm(bp["ln1"], x, cfg)
+    c: dict = {}
+    if kind in ("attn", "local", "swa"):
+        q, kk, vv = attn._qkv(bp["mix"], h, cfg)
+        theta = attn._rope_theta(cfg, kind)
+        from .layers import apply_rope
+        q = apply_rope(q, ctx.positions, theta)
+        kk = apply_rope(kk, ctx.positions, theta)
+        window = cfg.window if kind in ("local", "swa") else 0
+        from ..kernels import ops as kops
+        o = kops.attention(q, kk, vv, causal=True, window=window)
+        mix = o.reshape(o.shape[:-2] + (-1,)) @ bp["mix"]["wo"].astype(x.dtype)
+        c = _fill_kv(cfg, kind, kk, vv, cache_len)
+    elif kind == "xattn":
+        mix = attn.cross_attention_fwd(bp["mix"], h, ctx.media, cfg)
+    elif kind == "rwkv6":
+        r, kk, vv, g, w = rwkv_mod._time_mix_inputs(bp["mix"], h, cfg, None)
+        B, T, H, hd = r.shape
+        from ..kernels import ops as kops
+        S0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+        y, S1 = kops.rwkv6_stateful(r, kk, vv, w, bp["mix"]["bonus_u"], S0)
+        mix = rwkv_mod._finish(bp["mix"], y, g, x.dtype, cfg)
+        c = {"S": S1, "x_last": h[:, -1]}
+    elif kind == "rglru":
+        dt = x.dtype
+        p = bp["mix"]
+        y = jax.nn.gelu(h @ p["wy"].astype(dt), approximate=True)
+        u_in = h @ p["wx"].astype(dt)
+        u = rglru_mod._causal_conv(u_in, p["conv_w"], p["conv_b"], None)
+        a, i = rglru_mod._gates(p, u)
+        from ..kernels import ref as kref
+        hseq, hT = kref.rglru(i * u, a)
+        mix = (y * hseq) @ p["wo"].astype(dt)
+        cw = cfg.conv_width
+        tail = u_in[:, -(cw - 1):]
+        pad = (cw - 1) - tail.shape[1]
+        if pad > 0:
+            tail = jnp.pad(tail, ((0, 0), (pad, 0), (0, 0)))
+        c = {"h": hT, "conv": tail}
+    x = x + mix
+    h2 = apply_norm(bp["ln2"], x, cfg)
+    if kind == "rwkv6":
+        f = rwkv_mod.chan_mix_fwd(bp["ffn"], h2, cfg)
+        c["cx_last"] = h2[:, -1]
+    else:
+        f, _ = _apply_ffn(bp, kind, h2, cfg)
+    return x + f, c
+
+
+def prefill(params: dict, tokens: jnp.ndarray, cfg: ModelConfig,
+            cache_len: int | None = None,
+            media: jnp.ndarray | None = None,
+            remat: str = "none",
+            act_specs: dict | None = None) -> tuple[jnp.ndarray, dict]:
+    """Process a prompt, returning (last-position logits (B, V), cache)."""
+    B, S = tokens.shape
+    cache_len = cache_len or S
+    x = embed_tokens(params, tokens, cfg)
+    x = _wsc(x, act_specs, "act")
+    ctx = Ctx(positions=jnp.broadcast_to(jnp.arange(S)[None], (B, S)))
+    if cfg.frontend == "vision":
+        ctx.media = media.astype(cfg.dtype) @ \
+            params["frontend_proj"].astype(cfg.dtype)
+
+    cache: dict[str, Any] = {}
+    for gi, g in enumerate(cfg.groups):
+        gp = params["groups"][f"g{gi}"]
+
+        def body(xc, slot_params, _g=g):
+            xc = _wsc(xc, act_specs, "act")
+            new_slots = {}
+            for si, kind in enumerate(_g.pattern):
+                xc, nc = _prefill_block(slot_params[f"s{si}"], kind, xc, cfg,
+                                        ctx, cache_len)
+                new_slots[f"s{si}"] = nc
+            return xc, new_slots
+
+        x, cache_g = jax.lax.scan(_remat_wrap(body, remat), x, gp)
+        cache[f"g{gi}"] = cache_g
+
+    x = apply_norm(params["final_norm"], x[:, -1:], cfg)
+    return lm_logits(params, x, cfg)[:, 0], cache

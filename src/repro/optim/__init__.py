@@ -1,0 +1,5 @@
+"""Optimizers + schedules in pure JAX."""
+from .optimizers import (OptConfig, Optimizer, clip_by_global_norm,  # noqa: F401
+                         compress_grads, global_norm, init_residual,
+                         make_optimizer)
+from . import schedules  # noqa: F401

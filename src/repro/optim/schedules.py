@@ -1,0 +1,26 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def linear_warmup_cosine(lr: float, warmup: int, total: int,
+                         final_frac: float = 0.1):
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = lr * jnp.minimum(s / jnp.maximum(warmup, 1), 1.0)
+        prog = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(s < warmup, warm, lr * cos)
+    return f
+
+
+def inverse_sqrt(lr: float, warmup: int):
+    def f(step):
+        s = jnp.maximum(step.astype(jnp.float32), 1.0)
+        return lr * jnp.minimum(s / warmup, jnp.sqrt(warmup / s))
+    return f

@@ -1,0 +1,2 @@
+"""Distributed-runtime substrate: fault handling, elastic scaling hooks."""
+from .fault import FailureInjector, RetryPolicy, run_with_recovery  # noqa: F401

@@ -1,0 +1,147 @@
+"""Machine-checked versions of the paper's Theorems 1-3 and Fig-3 examples,
+via hypothesis property testing over scheduler-generated executions."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import history as H
+from repro.core.scheduler import random_schedule
+
+WORKERS = st.integers(min_value=2, max_value=5)
+ITERS = st.integers(min_value=1, max_value=4)
+SEEDS = st.integers(min_value=0, max_value=10_000)
+
+
+# ---------------------------------------------------------------------------
+# Paper's own examples (Fig 1, Fig 3)
+# ---------------------------------------------------------------------------
+
+class TestPaperExamples:
+    def test_h1_is_bsp_and_rcwc(self):
+        h1 = H.normalize_history(H.paper_h1())
+        assert H.satisfies_bsp(h1, 2)
+        assert H.satisfies_rcwc(h1, 2)
+        assert H.is_sequentially_correct(h1, 2)
+
+    def test_h2_is_rcwc_but_not_bsp(self):
+        """H2 is 'one of the several more executions possible by relaxing
+        the barrier conditions' — Theorem 3's strictness witness."""
+        h2 = H.normalize_history(H.paper_h2())
+        assert not H.satisfies_bsp(h2, 2)
+        assert H.satisfies_rcwc(h2, 2)
+        assert H.is_sequentially_correct(h2, 2)
+
+    def test_h3_rejected(self):
+        """H3 is 'permitted neither by the BSP nor the RC and WC'."""
+        h3 = H.normalize_history(H.paper_h3())
+        assert not H.satisfies_bsp(h3, 2)
+        assert not H.satisfies_rcwc(h3, 2)
+        assert not H.is_sequentially_correct(h3, 2)
+
+    def test_h2_semantically_equal_h3_not(self):
+        upd = H.default_update(2, 3, seed=1)
+        seq = H.sequential_result(2, 2, 3, upd)
+        h2 = H.normalize_history(H.paper_h2())
+        h3 = H.normalize_history(H.paper_h3())
+        assert np.allclose(H.execute_history(h2, 2, 3, upd), seq)
+        assert not np.allclose(H.execute_history(h3, 2, 3, upd), seq)
+
+    def test_seq_executions_fig1(self):
+        seq1 = H.sequential_history(2, 2)
+        assert H.is_strictly_sequential(seq1, 2)
+        assert H.is_sequentially_correct(seq1, 2)
+
+
+# ---------------------------------------------------------------------------
+# Theorem 1: BSP => sequential ML computation
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=50, deadline=None)
+@given(p=WORKERS, n=ITERS, seed=SEEDS)
+def test_bsp_schedules_are_sequential(p, n, seed):
+    h = random_schedule("bsp", p, n, seed=seed)
+    assert H.is_complete(h, p, n)
+    assert H.satisfies_bsp(h, p)
+    assert H.is_sequentially_correct(h, p)
+
+
+# ---------------------------------------------------------------------------
+# Theorem 2: RC/WC => sequential ML computation (syntactic AND semantic)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=50, deadline=None)
+@given(p=WORKERS, n=ITERS, seed=SEEDS)
+def test_rcwc_schedules_are_sequential(p, n, seed):
+    h = random_schedule("dc", p, n, seed=seed)
+    assert H.is_complete(h, p, n)
+    assert H.satisfies_rcwc(h, p)
+    assert H.is_sequentially_correct(h, p)
+
+
+@settings(max_examples=25, deadline=None)
+@given(p=st.integers(2, 4), n=st.integers(1, 3), seed=SEEDS)
+def test_rcwc_schedules_semantically_equal_sequential(p, n, seed):
+    """The strong form: executing any RC/WC-admissible interleaving against
+    a non-commuting numeric update gives exactly the sequential answer."""
+    h = random_schedule("dc", p, n, seed=seed)
+    dim = 2
+    upd = H.default_update(p, dim, seed=seed % 17)
+    got = H.execute_history(h, p, dim, upd)
+    want = H.sequential_result(p, n, dim, upd)
+    np.testing.assert_allclose(got, want, rtol=0, atol=0)
+
+
+# ---------------------------------------------------------------------------
+# Theorem 3: BSP executions ⊆ RC/WC executions (and strictly so)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=50, deadline=None)
+@given(p=WORKERS, n=ITERS, seed=SEEDS)
+def test_bsp_subset_rcwc(p, n, seed):
+    h = random_schedule("bsp", p, n, seed=seed)
+    assert H.satisfies_rcwc(h, p)        # every BSP execution is RC/WC
+
+
+def test_rcwc_strictly_larger():
+    """Find an RC/WC execution that BSP forbids (H2 is one; fuzzing finds
+    more) — the 'more possible executions' half of Theorem 3."""
+    found = 0
+    for seed in range(200):
+        h = random_schedule("dc", 3, 2, seed=seed)
+        if not H.satisfies_bsp(h, 3):
+            found += 1
+    assert found > 0, "no RC/WC-only execution found in 200 schedules"
+
+
+# ---------------------------------------------------------------------------
+# Sec 7: delta-admissible delay
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(p=st.integers(2, 4), n=st.integers(2, 4), seed=SEEDS,
+       delta=st.integers(1, 2))
+def test_delta_schedules_satisfy_async_constraints(p, n, seed, delta):
+    h = random_schedule("dc", p, n, seed=seed, delta=delta)
+    assert H.is_complete(h, p, n)
+    assert H.satisfies_read_constraint(h, delta=delta)
+    assert H.satisfies_write_constraint(h, p, delta=delta)
+
+
+def test_delta_admits_non_sequential_histories():
+    """delta > 0 must admit histories that the delta=0 engine rejects —
+    the whole point of admissible delay."""
+    found = 0
+    for seed in range(300):
+        h = random_schedule("dc", 3, 3, seed=seed, delta=2)
+        if not H.is_sequentially_correct(h, 3):
+            found += 1
+    assert found > 0
+
+
+def test_delta_zero_matches_bitvector_engine():
+    """Sec 7.1 engine at delta=0 == Sec 5 bit-vector engine (same admitted
+    histories for the same random choices)."""
+    for seed in range(50):
+        h1 = random_schedule("dc", 3, 3, seed=seed)          # bit-vector
+        h2 = random_schedule("dc-array", 3, 3, seed=seed)    # delta array
+        assert h1 == h2

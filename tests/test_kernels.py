@@ -1,0 +1,131 @@
+"""Pallas kernels vs jnp oracles: shape/dtype sweeps in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.rglru_scan import rglru_scan
+from repro.kernels.rwkv6_scan import rwkv6_scan
+
+TOL = {jnp.float32: dict(rtol=2e-5, atol=2e-5),
+       jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("S,H,KV,hd,bq,bk", [
+        (64, 4, 4, 32, 32, 32),      # MHA
+        (96, 4, 2, 32, 32, 32),      # GQA, ragged block tail
+        (128, 6, 2, 16, 64, 32),     # GQA 3:1, mixed blocks
+        (33, 2, 1, 8, 16, 16),       # non-multiple seq (padding path)
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("causal,window", [(True, 0), (True, 24),
+                                               (False, 0)])
+    def test_matches_ref(self, S, H, KV, hd, bq, bk, dtype, causal, window):
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        q = _rand(ks[0], (2, S, H, hd), dtype)
+        k = _rand(ks[1], (2, S, KV, hd), dtype)
+        v = _rand(ks[2], (2, S, KV, hd), dtype)
+        want = ref.attention(q, k, v, causal=causal, window=window)
+        got = flash_attention(q, k, v, causal=causal, window=window,
+                              block_q=bq, block_k=bk, interpret=True)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32),
+                                   **TOL[dtype])
+
+    def test_chunked_xla_path_matches(self):
+        ks = jax.random.split(jax.random.PRNGKey(1), 3)
+        q = _rand(ks[0], (1, 4096, 2, 16), jnp.float32)
+        k = _rand(ks[1], (1, 4096, 1, 16), jnp.float32)
+        v = _rand(ks[2], (1, 4096, 1, 16), jnp.float32)
+        want = ref.attention(q, k, v, causal=True, window=128)
+        got = ref.attention_chunked(q, k, v, causal=True, window=128,
+                                    block_q=512)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+class TestRWKV6:
+    @pytest.mark.parametrize("T,H,hd,bt", [
+        (32, 2, 16, 16), (48, 4, 32, 16), (40, 1, 64, 32),  # ragged tail
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_ref(self, T, H, hd, bt, dtype):
+        ks = jax.random.split(jax.random.PRNGKey(2), 5)
+        B = 2
+        r = _rand(ks[0], (B, T, H, hd), dtype) * 0.5
+        k = _rand(ks[1], (B, T, H, hd), dtype) * 0.5
+        v = _rand(ks[2], (B, T, H, hd), dtype) * 0.5
+        w = (jax.nn.sigmoid(_rand(ks[3], (B, T, H, hd), jnp.float32))
+             * 0.5 + 0.45).astype(dtype)
+        u = _rand(ks[4], (H, hd), dtype) * 0.1
+        want = ref.rwkv6(r, k, v, w, u)
+        got = rwkv6_scan(r, k, v, w, u, block_t=bt, interpret=True)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32),
+                                   **TOL[dtype])
+
+    def test_stateful_continuation(self):
+        """Splitting a sequence across two stateful calls == one call."""
+        ks = jax.random.split(jax.random.PRNGKey(3), 5)
+        B, T, H, hd = 1, 24, 2, 16
+        r = _rand(ks[0], (B, T, H, hd), jnp.float32) * 0.5
+        k = _rand(ks[1], (B, T, H, hd), jnp.float32) * 0.5
+        v = _rand(ks[2], (B, T, H, hd), jnp.float32) * 0.5
+        w = jax.nn.sigmoid(_rand(ks[3], (B, T, H, hd), jnp.float32)) * 0.5 + 0.4
+        u = _rand(ks[4], (H, hd), jnp.float32) * 0.1
+        full = ref.rwkv6(r, k, v, w, u)
+        S0 = jnp.zeros((B, H, hd, hd))
+        y1, S1 = ref.rwkv6_stateful(r[:, :10], k[:, :10], v[:, :10],
+                                    w[:, :10], u, S0)
+        y2, _ = ref.rwkv6_stateful(r[:, 10:], k[:, 10:], v[:, 10:],
+                                   w[:, 10:], u, S1)
+        np.testing.assert_allclose(jnp.concatenate([y1, y2], 1), full,
+                                   rtol=1e-5, atol=1e-6)
+
+
+class TestRGLRU:
+    @pytest.mark.parametrize("T,D,bd,bt", [
+        (32, 64, 64, 16), (48, 160, 64, 32), (50, 96, 32, 16),  # ragged
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_ref(self, T, D, bd, bt, dtype):
+        ks = jax.random.split(jax.random.PRNGKey(4), 2)
+        x = _rand(ks[0], (2, T, D), dtype)
+        a = jax.nn.sigmoid(_rand(ks[1], (2, T, D), jnp.float32)).astype(dtype)
+        want, _ = ref.rglru(x, a)
+        got = rglru_scan(x, a, block_d=bd, block_t=bt, interpret=True)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32),
+                                   **TOL[dtype])
+
+    def test_stateful_continuation(self):
+        ks = jax.random.split(jax.random.PRNGKey(5), 2)
+        x = _rand(ks[0], (1, 20, 32), jnp.float32)
+        a = jax.nn.sigmoid(_rand(ks[1], (1, 20, 32), jnp.float32))
+        full, hT = ref.rglru(x, a)
+        y1, h1 = ref.rglru(x[:, :7], a[:, :7])
+        y2, h2 = ref.rglru(x[:, 7:], a[:, 7:], h0=h1)
+        np.testing.assert_allclose(jnp.concatenate([y1, y2], 1), full,
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(h2, hT, rtol=1e-5, atol=1e-6)
+
+
+class TestDecode:
+    def test_attention_decode_matches_full(self):
+        """Decode against a cache == last row of full attention."""
+        ks = jax.random.split(jax.random.PRNGKey(6), 3)
+        B, S, H, KV, hd = 2, 17, 4, 2, 16
+        q = _rand(ks[0], (B, S, H, hd), jnp.float32)
+        k = _rand(ks[1], (B, S, KV, hd), jnp.float32)
+        v = _rand(ks[2], (B, S, KV, hd), jnp.float32)
+        full = ref.attention(q, k, v, causal=True)
+        got = ref.attention_decode(q[:, -1:], k, v,
+                                   jnp.ones((S,), bool))
+        np.testing.assert_allclose(got[:, 0], full[:, -1],
+                                   rtol=1e-5, atol=1e-6)

@@ -1,0 +1,95 @@
+"""Optimizers: AdamW math, clipping, int8 gradient compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import (OptConfig, clip_by_global_norm, compress_grads,
+                         global_norm, init_residual, make_optimizer)
+from repro.optim.optimizers import dequantize_int8, quantize_int8
+
+
+def test_adamw_matches_manual():
+    cfg = OptConfig(name="adamw", lr=0.1, b1=0.9, b2=0.99, eps=1e-8,
+                    weight_decay=0.01, grad_clip=0)
+    opt = make_optimizer(cfg)
+    p = {"w": jnp.asarray([1.0, -2.0, 3.0])}
+    g = {"w": jnp.asarray([0.5, 0.5, -1.0])}
+    state = opt.init(p)
+    new_p, state = opt.update(g, state, p)
+
+    m = 0.1 * np.asarray(g["w"])
+    v = 0.01 * np.asarray(g["w"]) ** 2
+    mhat = m / (1 - 0.9)
+    vhat = v / (1 - 0.99)
+    want = np.asarray(p["w"]) - 0.1 * (
+        mhat / (np.sqrt(vhat) + 1e-8) + 0.01 * np.asarray(p["w"]))
+    np.testing.assert_allclose(np.asarray(new_p["w"]), want, rtol=1e-6)
+
+
+def test_sgd_basic():
+    opt = make_optimizer(OptConfig(name="sgd", lr=0.5, grad_clip=0))
+    p = {"w": jnp.ones(3)}
+    g = {"w": jnp.full(3, 2.0)}
+    new_p, _ = opt.update(g, opt.init(p), p)
+    np.testing.assert_allclose(np.asarray(new_p["w"]), np.zeros(3))
+
+
+def test_momentum_accumulates():
+    opt = make_optimizer(OptConfig(name="momentum", lr=1.0, momentum=0.5,
+                                   grad_clip=0))
+    p = {"w": jnp.zeros(1)}
+    g = {"w": jnp.ones(1)}
+    s = opt.init(p)
+    p, s = opt.update(g, s, p)       # mom=1, w=-1
+    p, s = opt.update(g, s, p)       # mom=1.5, w=-2.5
+    np.testing.assert_allclose(np.asarray(p["w"]), [-2.5])
+
+
+def test_global_norm_clip():
+    g = {"a": jnp.asarray([3.0]), "b": jnp.asarray([4.0])}
+    assert float(global_norm(g)) == pytest.approx(5.0)
+    clipped = clip_by_global_norm(g, 1.0)
+    assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+    # under the limit: unchanged
+    small = clip_by_global_norm(g, 10.0)
+    np.testing.assert_allclose(np.asarray(small["a"]), [3.0])
+
+
+class TestInt8Compression:
+    def test_quantize_roundtrip_bounded_error(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (256,)) * 3
+        q, s = quantize_int8(x)
+        err = jnp.abs(dequantize_int8(q, s) - x).max()
+        assert float(err) <= float(s) * 0.51
+
+    def test_error_feedback_is_unbiased_over_time(self):
+        """With a constant gradient, the error-feedback residual makes the
+        accumulated compressed signal converge to the true total."""
+        g = {"w": jnp.full((64,), 0.01303)}
+        res = init_residual(g)
+        acc = jnp.zeros((64,))
+        for t in range(50):
+            deq, res = compress_grads(g, res)
+            acc = acc + deq["w"]
+        total_true = 0.01303 * 50
+        np.testing.assert_allclose(np.asarray(acc), total_true, rtol=2e-2)
+
+    def test_compressed_sgd_converges(self):
+        key = jax.random.PRNGKey(1)
+        A = jax.random.normal(key, (32, 8)) / np.sqrt(8)
+        w_true = jax.random.normal(jax.random.PRNGKey(2), (8,))
+        y = A @ w_true
+
+        def grad_fn(p):
+            r = A @ p["w"] - y
+            return {"w": A.T @ r / 32}
+
+        opt = make_optimizer(OptConfig(name="sgd", lr=0.5, grad_clip=0,
+                                       compression="int8"))
+        p = {"w": jnp.zeros(8)}
+        s = opt.init(p)
+        for _ in range(300):
+            p, s = opt.update(grad_fn(p), s, p)
+        final = float(jnp.mean((A @ p["w"] - y) ** 2))
+        assert final < 1e-3

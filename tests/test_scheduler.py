@@ -1,0 +1,120 @@
+"""Unit tests for the Sec-5 / Sec-7.1 admission protocols."""
+import math
+
+import pytest
+
+from repro.core.scheduler import (BSPScheduler, BitVectorScheduler,
+                                  DeltaScheduler, random_schedule)
+
+
+class TestBitVector:
+    def test_initial_reads_allowed(self):
+        s = BitVectorScheduler(3)
+        for i in range(3):
+            for j in range(3):
+                assert s.can_read(i, j, 1)
+
+    def test_read_ahead_blocked(self):
+        s = BitVectorScheduler(2)
+        assert not s.can_read(0, 1, 2)   # chunk 1 not yet written for iter 1
+
+    def test_write_requires_all_reads(self):
+        """'a write on pi_i can be executed if this chunk has been read by
+        all the worker processes in their alpha-th iterations'."""
+        s = BitVectorScheduler(2)
+        s.did_read(0, 0, 1)
+        assert not s.can_write(0, 0, 1)  # worker 1 hasn't read chunk 0
+        s.did_read(1, 0, 1)
+        assert s.can_write(0, 0, 1)
+
+    def test_write_zeroes_bits(self):
+        s = BitVectorScheduler(2)
+        for w in range(2):
+            s.did_read(w, 0, 1)
+        s.did_write(0, 0, 1)
+        assert s.bits[0] == [False, False]
+        assert s.version[0] == 1
+        assert not s.can_write(0, 0, 2)
+
+    def test_read_version_gate(self):
+        """'read can be executed if the iteration number in the read
+        operation is one more than the iteration number of the chunk'."""
+        s = BitVectorScheduler(2)
+        for w in range(2):
+            s.did_read(w, 0, 1)
+        s.did_write(0, 0, 1)
+        assert s.can_read(1, 0, 2)
+        assert not s.can_read(1, 0, 3)
+
+
+class TestDelta:
+    def test_delta0_equals_bitvector(self):
+        b = BitVectorScheduler(3)
+        d = DeltaScheduler(3, delta=0)
+        ops = [("r", 0, 0, 1), ("r", 1, 0, 1), ("r", 2, 0, 1)]
+        for _, w, c, a in ops:
+            assert b.can_read(w, c, a) == d.can_read(w, c, a)
+            b.did_read(w, c, a)
+            d.did_read(w, c, a)
+        assert b.can_write(0, 0, 1) == d.can_write(0, 0, 1) is True
+
+    def test_stale_read_allowed(self):
+        d = DeltaScheduler(2, delta=1)
+        # chunk 1 never written, but version 0 >= 2-1-1 = 0
+        assert d.can_read(0, 1, 2)
+        assert not d.can_read(0, 1, 3)
+
+    def test_write_min_gate(self):
+        """'write can be executed if the slowest worker to read this chunk
+        is no more than delta iterations behind'."""
+        d = DeltaScheduler(2, delta=1)
+        d.did_read(0, 0, 2)
+        d.did_read(1, 0, 1)                  # slowest reader at iter 1
+        assert d.can_write(0, 0, 2)          # 1 >= 2 - 1
+        assert not d.can_write(0, 0, 3)      # 1 <  3 - 1
+
+    def test_hogwild_limit(self):
+        d = DeltaScheduler(2, delta=math.inf)
+        assert d.hogwild
+        assert d.can_read(0, 1, 10 ** 6)
+        assert d.can_write(0, 0, 10 ** 6)
+
+    def test_negative_delta_rejected(self):
+        with pytest.raises(ValueError):
+            DeltaScheduler(2, delta=-1)
+
+
+class TestBSP:
+    def test_read_barrier(self):
+        s = BSPScheduler(2)
+        assert s.can_read(0, 0, 1)
+        assert not s.can_read(0, 0, 2)       # nobody wrote iter 1
+        s.did_write(0, 0, 1)
+        assert not s.can_read(0, 0, 2)       # worker 1 still hasn't
+        s.did_write(1, 1, 1)
+        assert s.can_read(0, 0, 2)
+
+    def test_write_barrier_global(self):
+        s = BSPScheduler(2)
+        for j in range(2):
+            s.did_read(0, j, 1)
+        assert not s.can_write(0, 0, 1)      # worker 1's reads missing
+        for j in range(2):
+            s.did_read(1, j, 1)
+        assert s.can_write(0, 0, 1)
+
+
+class TestProgress:
+    """Deadlock freedom: the random scheduler always completes."""
+
+    @pytest.mark.parametrize("policy", ["bsp", "dc", "dc-array"])
+    @pytest.mark.parametrize("p,n", [(2, 3), (4, 3), (6, 2)])
+    def test_total_progress(self, policy, p, n):
+        for seed in range(5):
+            h = random_schedule(policy, p, n, seed=seed)
+            assert len(h) == p * n * (p + 1)
+
+    def test_progress_with_delta(self):
+        for seed in range(5):
+            h = random_schedule("dc", 3, 4, seed=seed, delta=2)
+            assert len(h) == 3 * 4 * 4

@@ -1,0 +1,86 @@
+"""Discrete-event simulator: Fig-2 trend reproduction + invariants."""
+import pytest
+
+from repro.core.simulator import (SimConfig, amdahl_speedup, improvement_pct,
+                                  serial_makespan, simulate, trimmed_mean)
+
+
+def test_dc_beats_bsp_gd_regime():
+    imp = improvement_pct(dict(n_workers=16, n_iters=30, seed=0))
+    assert imp > 5.0
+
+
+def test_improvement_grows_with_workers_gd():
+    """Fig 2a: 'as the number of workers increases, data-centric
+    synchronization gets more opportunity for improvement'."""
+    imps = [improvement_pct(dict(n_workers=p, n_iters=30, seed=1))
+            for p in (6, 16, 40)]
+    assert imps[0] < imps[-1]
+
+
+def test_sgd_regime_high_improvement_declining():
+    """Fig 2e: SGD improvement is high at small p and declines with p."""
+    i6 = improvement_pct(dict(n_workers=6, n_iters=30, compute_mu=0.5,
+                              seed=0))
+    i40 = improvement_pct(dict(n_workers=40, n_iters=30, compute_mu=0.5,
+                               seed=0))
+    assert i6 > 50.0
+    assert i40 < i6
+
+
+def test_minibatch_declines_less_than_sgd():
+    """Fig 2f: 'the decline is much more pronounced in SGD whereas it is
+    not as sharp under mini-batch'."""
+    def decline(mu):
+        a = improvement_pct(dict(n_workers=6, n_iters=30, compute_mu=mu,
+                                 seed=2))
+        b = improvement_pct(dict(n_workers=40, n_iters=30, compute_mu=mu,
+                                 seed=2))
+        return a - b
+    assert decline(0.5) > decline(2.5)
+
+
+def test_delta_absorbs_stragglers():
+    base = dict(n_workers=16, n_iters=30, straggler_prob=0.05, seed=1)
+    i0 = improvement_pct(base, delta=0)
+    i2 = improvement_pct(base, delta=2)
+    assert i2 > i0 + 10.0
+
+
+def test_backup_tasks_cap_stragglers():
+    cfg = dict(n_workers=16, n_iters=30, straggler_prob=0.05,
+               straggler_factor=20.0, seed=3)
+    plain = simulate(SimConfig(policy="dc", **cfg))
+    backed = simulate(SimConfig(policy="dc", backup_tasks=True, **cfg))
+    assert backed.makespan < plain.makespan
+
+
+def test_deterministic():
+    cfg = SimConfig(n_workers=8, n_iters=20, seed=5)
+    assert simulate(cfg).makespan == simulate(cfg).makespan
+
+
+def test_same_workload_across_policies():
+    """Both policies see identical compute draws — differences are pure
+    synchronization effects."""
+    a = simulate(SimConfig(policy="bsp", n_workers=8, n_iters=10, seed=7,
+                           read_cost=0, write_cost=0, barrier_cost=0,
+                           barrier_base=0, check_cost=0))
+    b = simulate(SimConfig(policy="dc", n_workers=8, n_iters=10, seed=7,
+                           read_cost=0, write_cost=0, barrier_cost=0,
+                           barrier_base=0, check_cost=0))
+    # with zero sync costs both reduce to sum of per-iteration maxima
+    assert a.makespan == pytest.approx(b.makespan, rel=1e-9)
+
+
+def test_speedup_below_amdahl():
+    cfg = SimConfig(policy="dc", n_workers=16, n_iters=30, seed=0)
+    sp = serial_makespan(cfg) / simulate(cfg).makespan
+    assert 1.0 < sp < 16.0
+    assert sp < amdahl_speedup(16, 0.01) * 1.05
+
+
+def test_trimmed_mean_drops_extremes():
+    xs = [100.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 0.0]
+    assert trimmed_mean(xs) == pytest.approx(sum(range(2, 8)) / 6 + 0.0,
+                                             rel=1e-9)

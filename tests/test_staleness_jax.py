@@ -1,0 +1,123 @@
+"""JAX delta-staleness engine: Sec-7 semantics on SPMD-style training."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.staleness import init_delayed_state, make_delayed_step
+from repro.optim import OptConfig, make_optimizer
+
+
+def _toy_problem(seed=0, dim=8):
+    key = jax.random.PRNGKey(seed)
+    A = jax.random.normal(key, (32, dim)) / np.sqrt(dim)
+    w_true = jax.random.normal(jax.random.PRNGKey(seed + 1), (dim,))
+    y = A @ w_true
+
+    def grad_fn(params, batch):
+        def loss(p):
+            r = batch["A"] @ p["w"] - batch["y"]
+            return 0.5 * jnp.mean(r * r)
+        l, g = jax.value_and_grad(loss)(params)
+        return l, g
+
+    return {"w": jnp.zeros((dim,))}, {"A": A, "y": y}, grad_fn
+
+
+@pytest.mark.parametrize("opt_name", ["sgd", "adamw"])
+def test_delta0_bit_identical_to_sync(opt_name):
+    """The paper's central guarantee mapped to steps: delta=0 == synchronous
+    training exactly (both sides jitted — comparing jit to eager would only
+    measure XLA fusion noise, not the engine)."""
+    params, batch, grad_fn = _toy_problem()
+    opt = make_optimizer(OptConfig(name=opt_name, lr=0.1, grad_clip=0,
+                                   weight_decay=0.0))
+
+    @jax.jit
+    def sync_step(p, s, b):
+        _, g = grad_fn(p, b)
+        return opt.update(g, s, p)
+
+    p_sync, s_sync = params, opt.init(params)
+    for _ in range(10):
+        p_sync, s_sync = sync_step(p_sync, s_sync, batch)
+
+    # delayed engine with delta=0
+    step = jax.jit(make_delayed_step(grad_fn, opt.update, delta=0))
+    state = init_delayed_state(params, opt.init, delta=0)
+    for _ in range(10):
+        state, m = step(state, batch)
+
+    np.testing.assert_array_equal(np.asarray(p_sync["w"]),
+                                  np.asarray(state.params["w"]))
+
+
+def test_delta_matches_manual_delayed_gd():
+    """delta=2 must equal hand-rolled delayed gradient descent:
+    w[t+1] = w[t] - lr * grad(w[t-2])."""
+    params, batch, grad_fn = _toy_problem(seed=3)
+    lr, delta, steps = 0.05, 2, 12
+    opt = make_optimizer(OptConfig(name="sgd", lr=lr, grad_clip=0))
+
+    hist = [np.asarray(params["w"])] * (delta + 1)
+    w = np.asarray(params["w"])
+    for t in range(steps):
+        stale = hist[0]
+        _, g = grad_fn({"w": jnp.asarray(stale)}, batch)
+        w = w - lr * np.asarray(g["w"])
+        hist = hist[1:] + [w]
+
+    step = jax.jit(make_delayed_step(grad_fn, opt.update, delta=delta))
+    state = init_delayed_state(params, opt.init, delta=delta)
+    for _ in range(steps):
+        state, _ = step(state, batch)
+
+    np.testing.assert_allclose(np.asarray(state.params["w"]), w,
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_delta_converges_on_convex():
+    params, batch, grad_fn = _toy_problem(seed=5)
+    opt = make_optimizer(OptConfig(name="sgd", lr=0.2, grad_clip=0))
+    step = jax.jit(make_delayed_step(grad_fn, opt.update, delta=3))
+    state = init_delayed_state(params, opt.init, delta=3)
+    first = None
+    for _ in range(60):
+        state, m = step(state, batch)
+        first = float(m["loss"]) if first is None else first
+    assert float(m["loss"]) < 0.2 * first
+
+
+def test_per_group_delays():
+    """Sec-7.1 per-chunk version arrays: different param groups can read
+    different staleness levels."""
+    params, batch, grad_fn0 = _toy_problem(seed=7)
+    params = {"a": params["w"], "b": params["w"] + 1.0}
+
+    def grad_fn(p, batch_):
+        def loss(pp):
+            r = batch_["A"] @ (pp["a"] + pp["b"]) - batch_["y"]
+            return 0.5 * jnp.mean(r * r)
+        l, g = jax.value_and_grad(loss)(p)
+        return l, g
+
+    opt = make_optimizer(OptConfig(name="sgd", lr=0.1, grad_clip=0))
+
+    def delay_for(path):
+        name = path[0].key if hasattr(path[0], "key") else str(path[0])
+        return 0 if name == "a" else 2
+
+    step = jax.jit(make_delayed_step(grad_fn, opt.update, delta=2,
+                                     delay_for=delay_for))
+    state = init_delayed_state(params, opt.init, delta=2)
+    for _ in range(5):
+        state, m = step(state, batch)
+    assert jnp.isfinite(m["loss"])
+    # group 'a' read fresh params; 'b' read 2-step-stale ones — verify the
+    # trajectories differ from uniform delta in a controlled way
+    step_u = jax.jit(make_delayed_step(grad_fn, opt.update, delta=2))
+    state_u = init_delayed_state(params, opt.init, delta=2)
+    for _ in range(5):
+        state_u, _ = step_u(state_u, batch)
+    assert not np.allclose(np.asarray(state.params["a"]),
+                           np.asarray(state_u.params["a"]))
