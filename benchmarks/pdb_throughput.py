@@ -1,0 +1,89 @@
+"""Throughput of the unified ParameterDB layer: dc vs bsp (vs ssp/hogwild).
+
+Two measurements through the *same* code path (``repro.pdb``):
+
+  * threaded backend — real threads training the Sec-6 linear-regression
+    workload against :class:`repro.pdb.ThreadedParameterDB`; reports wall
+    time, DB ops/sec and end-to-end iterations/sec per policy;
+  * discrete-event simulator — makespan at scale (no GIL artifacts),
+    reporting the paper's improvement-% headline through the shared
+    policy engine.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.pdb_throughput [--quick]
+
+Prints ``name,us_per_call,derived`` CSV rows like benchmarks/run.py:
+'us_per_call' is wall time per DB op, 'derived' the throughput metric.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+from repro.core import threaded as T
+from repro.core.simulator import SimConfig, simulate
+
+POLICIES = ("bsp", "dc", "ssp", "hogwild")
+
+
+def bench_threaded(n_workers: int = 4, n_iters: int = 60,
+                   n_features: int = 960, n_examples: int = 2000,
+                   repeats: int = 3) -> list[tuple[str, float, float]]:
+    """(name, us_per_db_op, iters_per_sec) per policy — identical workload,
+    identical pre-drawn data, only the consistency policy differs."""
+    X, y = T.make_synthetic_lr(n_examples, n_features, seed=0)
+    task = T.LRTask(X, y, n_iters=n_iters, mode="gd")
+    ops_total = n_workers * n_iters * (n_workers + 1)
+    rows = []
+    for policy in POLICIES:
+        delta = 2 if policy == "ssp" else 0   # dc measured exact (delta=0)
+        walls = []
+        for _ in range(repeats):
+            stats = T.run_parallel(task, n_workers, policy=policy,
+                                   delta=delta)
+            walls.append(stats.wall_time)
+        wall = min(walls)
+        rows.append((f"threaded/{policy}", wall / ops_total * 1e6,
+                     n_iters / wall))
+    return rows
+
+
+def bench_simulated(n_workers: int = 32, n_iters: int = 50
+                    ) -> list[tuple[str, float, float]]:
+    """(name, makespan_ms, simulated_iters_per_sec) per policy at a worker
+    count real threads can't reach on one host."""
+    rows = []
+    for policy in POLICIES:
+        cfg = SimConfig(n_workers=n_workers, n_iters=n_iters, policy=policy,
+                        delta=2 if policy in ("ssp", "hogwild") else 0,
+                        seed=0)
+        res = simulate(cfg)
+        rows.append((f"simulated{n_workers}/{policy}", res.makespan,
+                     n_iters / (res.makespan / 1e3)))
+    return rows
+
+
+def main() -> None:
+    quick = "--quick" in sys.argv
+    print("name,us_per_call,derived")
+    t_rows = bench_threaded(n_iters=20 if quick else 60,
+                            repeats=1 if quick else 3)
+    for name, us, thru in t_rows:
+        print(f"{name},{us:.2f},{thru:.2f}")
+    s_rows = bench_simulated(n_iters=20 if quick else 50)
+    for name, ms, thru in s_rows:
+        print(f"{name},{ms:.2f},{thru:.2f}")
+
+    by = {n: d for n, _, d in t_rows + s_rows}
+    dc, bsp = by["threaded/dc"], by["threaded/bsp"]
+    print(f"# threaded dc vs bsp: {(dc - bsp) / bsp * 100:+.1f}% iters/sec",
+          file=sys.stderr)
+    dc_s, bsp_s = by["simulated32/dc"], by["simulated32/bsp"]
+    print(f"# simulated(32) dc vs bsp: {(dc_s - bsp_s) / bsp_s * 100:+.1f}% "
+          f"iters/sec", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

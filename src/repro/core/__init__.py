@@ -1,11 +1,14 @@
 """Core: the paper's parameter-database synchronization framework.
 
   history    — formal operation-history model + Theorem 1-3 checkers
-  scheduler  — Sec-5 bit-vector / Sec-7.1 delta protocols + BSP baseline
+  scheduler  — shim over repro.pdb.policies (Sec-5 / Sec-7.1 / BSP / SSP)
   simulator  — discrete-event makespan simulation (Fig 2 reproduction)
-  threaded   — live multi-threaded linear-regression runtime (Sec 6)
-  staleness  — deterministic delta-staleness engine for JAX training
+  threaded   — live multi-threaded linear-regression runtime (Sec 6) over
+               the blocking ParameterDB backend
+  staleness  — shim over repro.pdb.jax_backend (delta-staleness ring buffer)
   sync_jax   — sync-mode -> sharding-rule mapping for SPMD training
+
+The unified consistency layer itself lives in :mod:`repro.pdb`.
 """
 from . import history, scheduler, simulator, sync_jax, threaded  # noqa: F401
 from .sync_jax import SyncConfig  # noqa: F401

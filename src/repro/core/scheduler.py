@@ -1,178 +1,17 @@
-"""The data-centric synchronization protocols of Secs 5 and 7.1.
-
-Three admission engines share one interface (``can_read / can_write`` test
-admissibility; ``did_read / did_write`` record completion):
-
-  * :class:`BitVectorScheduler`  — the Sec-5 protocol verbatim: one bit per
-    worker per chunk gates writes; a per-chunk iteration number gates reads.
-    Enforces exact sequential semantics (delta = 0).
-  * :class:`DeltaScheduler`      — the Sec-7.1 revised protocol: a per-chunk
-    array of last-read iteration numbers; admissible delay ``delta >= 0``.
-    ``delta=0`` coincides with :class:`BitVectorScheduler`; ``delta=inf``
-    degenerates to Hogwild!-style fully asynchronous execution.
-  * :class:`BSPScheduler`        — the Algorithm-2a baseline: global read and
-    write barriers expressed in the same admission interface.
-
-These engines are *pure bookkeeping* — they never block.  Blocking wrappers
-live in :mod:`repro.core.threaded`; the discrete-event simulator in
-:mod:`repro.core.simulator` drives them directly.
+"""Compatibility shim: the admission engines now live in
+:mod:`repro.pdb.policies` as the *consistency policies* of the unified
+ParameterDB subsystem.  This module keeps the historical names alive
+(`*Scheduler`, ``make_scheduler``) for existing callers and tests; new code
+should import from :mod:`repro.pdb` directly.
 """
 from __future__ import annotations
 
-import math
-from typing import Protocol
-
-
-class Scheduler(Protocol):
-    def can_read(self, worker: int, chunk: int, itr: int) -> bool: ...
-    def can_write(self, worker: int, chunk: int, itr: int) -> bool: ...
-    def did_read(self, worker: int, chunk: int, itr: int) -> None: ...
-    def did_write(self, worker: int, chunk: int, itr: int) -> None: ...
-
-
-class BitVectorScheduler:
-    """Sec 5: 'a write on pi_i can be executed if this chunk has been read by
-    all the worker processes in their alpha-th iterations' (bit vector), and
-    'a read [at alpha+1] can be executed if [the chunk's] iteration number is
-    one less than the iteration number in the read operation'."""
-
-    def __init__(self, n_workers: int, n_chunks: int | None = None):
-        self.p = n_workers
-        self.m = n_chunks if n_chunks is not None else n_workers
-        # start as if freshly written (version 0, bits zeroed): iteration-1
-        # writes must wait for every worker's iteration-1 read of the chunk
-        self.bits = [[False] * self.p for _ in range(self.m)]
-        self.version = [0] * self.m  # iteration number of last executed write
-
-    def can_read(self, worker: int, chunk: int, itr: int) -> bool:
-        return self.version[chunk] == itr - 1
-
-    def did_read(self, worker: int, chunk: int, itr: int) -> None:
-        self.bits[chunk][worker] = True
-
-    def can_write(self, worker: int, chunk: int, itr: int) -> bool:
-        return all(self.bits[chunk])
-
-    def did_write(self, worker: int, chunk: int, itr: int) -> None:
-        self.bits[chunk] = [False] * self.p  # 'all bits are set to zero'
-        self.version[chunk] = itr
-
-
-class DeltaScheduler:
-    """Sec 7.1: per-chunk last-read iteration array + chunk version.
-
-    Read  r_i[pi_j][alpha] admissible iff version[j] >= alpha - 1 - delta.
-    Write w_i[pi_i][alpha] admissible iff min_k last_read[i][k] >= alpha - delta.
-    """
-
-    def __init__(self, n_workers: int, delta: float = 0,
-                 n_chunks: int | None = None):
-        if delta < 0:
-            raise ValueError("delta must be >= 0")
-        self.p = n_workers
-        self.m = n_chunks if n_chunks is not None else n_workers
-        self.delta = delta
-        self.version = [0] * self.m
-        self.last_read = [[0] * self.p for _ in range(self.m)]
-
-    def can_read(self, worker: int, chunk: int, itr: int) -> bool:
-        return self.version[chunk] >= itr - 1 - self.delta
-
-    def did_read(self, worker: int, chunk: int, itr: int) -> None:
-        self.last_read[chunk][worker] = max(self.last_read[chunk][worker], itr)
-
-    def can_write(self, worker: int, chunk: int, itr: int) -> bool:
-        return min(self.last_read[chunk]) >= itr - self.delta
-
-    def did_write(self, worker: int, chunk: int, itr: int) -> None:
-        self.version[chunk] = max(self.version[chunk], itr)
-
-    @property
-    def hogwild(self) -> bool:
-        return math.isinf(self.delta)
-
-
-class BSPScheduler:
-    """Algorithm 2a expressed as admission predicates.
-
-    Read barrier:  no read of iteration alpha+1 until *every* worker's write
-    of iteration alpha has executed.
-    Write barrier: no write of iteration alpha until *every* worker has
-    finished *all* its reads of iteration alpha.
-    """
-
-    def __init__(self, n_workers: int, n_chunks: int | None = None):
-        self.p = n_workers
-        self.m = n_chunks if n_chunks is not None else n_workers
-        self.writes_done = [0] * self.p      # writes_done[i] = last iter i wrote
-        self.reads_done = [[0] * self.m for _ in range(self.p)]
-        # reads_done[i][j] = last iter in which worker i read chunk j
-
-    def can_read(self, worker: int, chunk: int, itr: int) -> bool:
-        return all(v >= itr - 1 for v in self.writes_done)
-
-    def did_read(self, worker: int, chunk: int, itr: int) -> None:
-        self.reads_done[worker][chunk] = max(self.reads_done[worker][chunk], itr)
-
-    def can_write(self, worker: int, chunk: int, itr: int) -> bool:
-        return all(self.reads_done[i][j] >= itr
-                   for i in range(self.p) for j in range(self.m))
-
-    def did_write(self, worker: int, chunk: int, itr: int) -> None:
-        self.writes_done[worker] = max(self.writes_done[worker], itr)
-
-
-def random_schedule(policy: str, n_workers: int, n_iters: int,
-                    seed: int = 0, delta: float = 0) -> list:
-    """Generate a random admissible execution history: at every step pick a
-    uniformly random worker whose next Def-3 operation is admissible under
-    the policy.  Used by the hypothesis property tests (every such history
-    must be sequentially correct — Theorems 1/2) and as a fuzzer for the
-    admission engines (total progress = deadlock freedom)."""
-    import random as _random
-
-    from .history import Op, READ, WRITE
-
-    rng = _random.Random(seed)
-    sched = make_scheduler(policy, n_workers, delta)
-    # per-worker state: current iteration, unread chunks, write pending
-    itr = [1] * n_workers
-    unread = [set(range(n_workers)) for _ in range(n_workers)]
-    history: list[Op] = []
-    total = n_workers * n_iters * (n_workers + 1)
-    while len(history) < total:
-        moves: list[Op] = []
-        for i in range(n_workers):
-            if itr[i] > n_iters:
-                continue
-            if unread[i]:
-                moves += [Op(READ, i, j, itr[i]) for j in sorted(unread[i])
-                          if sched.can_read(i, j, itr[i])]
-            elif sched.can_write(i, i, itr[i]):
-                moves.append(Op(WRITE, i, i, itr[i]))
-        if not moves:
-            raise RuntimeError(
-                f"deadlock in random_schedule(policy={policy})")
-        op = rng.choice(moves)
-        if op.kind == READ:
-            sched.did_read(op.worker, op.chunk, op.itr)
-            unread[op.worker].discard(op.chunk)
-        else:
-            sched.did_write(op.worker, op.chunk, op.itr)
-            itr[op.worker] += 1
-            unread[op.worker] = set(range(n_workers))
-        history.append(op)
-    return history
-
-
-def make_scheduler(policy: str, n_workers: int, delta: float = 0,
-                   n_chunks: int | None = None) -> Scheduler:
-    if policy == "bsp":
-        return BSPScheduler(n_workers, n_chunks)
-    if policy == "dc":
-        if delta == 0:
-            return BitVectorScheduler(n_workers, n_chunks)
-        return DeltaScheduler(n_workers, delta, n_chunks)
-    if policy == "dc-array":  # Sec-7.1 engine even at delta=0
-        return DeltaScheduler(n_workers, delta, n_chunks)
-    raise ValueError(f"unknown policy {policy!r}")
+from ..pdb.policies import (  # noqa: F401
+    BSPPolicy as BSPScheduler,
+    BitVectorPolicy as BitVectorScheduler,
+    DeltaPolicy as DeltaScheduler,
+    Policy as Scheduler,
+    SSPPolicy as SSPScheduler,
+    make_policy as make_scheduler,
+    random_schedule,
+)

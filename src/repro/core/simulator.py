@@ -1,9 +1,9 @@
 """Discrete-event simulation of parallel ML execution (paper Sec 6).
 
 Models ``p`` workers executing the Def-3 program (read all chunks, compute,
-write own chunk) under one of the admission policies from
-:mod:`repro.core.scheduler`.  Cost model (calibrated against the paper's
-Sec-6 numbers in benchmarks/):
+write own chunk) under any consistency policy from
+:mod:`repro.pdb.policies` ("bsp", "dc", "dc-array", "ssp", "hogwild").
+Cost model (calibrated against the paper's Sec-6 numbers in benchmarks/):
 
   * each read / write op has a fixed latency (``read_cost`` / ``write_cost``:
     a shared-store round trip) and workers issue their ops serially;
@@ -35,7 +35,7 @@ import math
 
 import numpy as np
 
-from .scheduler import make_scheduler
+from ..pdb.policies import make_policy
 
 READ, COMPUTE, WRITE, DONE = "read", "compute", "write", "done"
 
@@ -44,7 +44,7 @@ READ, COMPUTE, WRITE, DONE = "read", "compute", "write", "done"
 class SimConfig:
     n_workers: int = 8
     n_iters: int = 50
-    policy: str = "dc"                 # "bsp" | "dc" | "dc-array"
+    policy: str = "dc"                 # "bsp" | "dc" | "dc-array" | "ssp" | "hogwild"
     delta: float = 0.0
     compute_mu: float = 8.0            # mean compute per iteration (ms)
     compute_sigma: float = 0.27        # lognormal sigma (task-time skew)
@@ -97,7 +97,7 @@ def _compute_times(cfg: SimConfig) -> np.ndarray:
 
 
 def simulate(cfg: SimConfig) -> SimResult:
-    sched = make_scheduler(cfg.policy, cfg.n_workers, cfg.delta)
+    sched = make_policy(cfg.policy, cfg.n_workers, cfg.delta)
     times = _compute_times(cfg)
     p = cfg.n_workers
     is_bsp = cfg.policy == "bsp"

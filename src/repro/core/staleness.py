@@ -1,99 +1,13 @@
-"""Deterministic delta-staleness training engine (paper Sec 7, TPU-native).
-
-On SPMD hardware there is no intra-program asynchrony, so the paper's
-admissible-delay semantics is mapped onto *steps*: the gradient at step
-``alpha`` is evaluated at the parameters of step ``alpha - delta`` and
-applied to the parameters of step ``alpha``.  A ring buffer holds the last
-``delta + 1`` parameter versions; per-partition-group delays (the Sec-7.1
-per-chunk version arrays) let different parts of the model read different
-staleness levels.
-
-``delta = 0`` is bit-identical to synchronous training (asserted in
-tests/test_staleness_jax.py) — the Sec-4 sequential-correctness guarantee.
-``delta = inf`` has no finite buffer; the engine caps at the configured
-delta, which is the bounded-staleness regime of SSP/parameter-server work
-the paper positions itself against.
+"""Compatibility shim: the deterministic delta-staleness engine (paper
+Sec 7, TPU-native) now lives in :mod:`repro.pdb.jax_backend` as the JAX
+device backend of the unified ParameterDB.  The historical entry points are
+re-exported here; new code should import from :mod:`repro.pdb` directly.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Callable
-
-import jax
-import jax.numpy as jnp
-
-PyTree = Any
-
-
-@dataclasses.dataclass
-class DelayedState:
-    params: PyTree          # current theta[alpha]
-    hist: PyTree            # stacked (delta+1, ...) ring buffer of versions
-    ptr: jnp.ndarray        # ring position of theta[alpha]
-    opt_state: PyTree
-    step: jnp.ndarray
-
-    def tree_flatten(self):
-        return ((self.params, self.hist, self.ptr, self.opt_state, self.step),
-                None)
-
-    @classmethod
-    def tree_unflatten(cls, aux, children):
-        return cls(*children)
-
-
-jax.tree_util.register_pytree_node(
+from ..pdb.jax_backend import (  # noqa: F401
     DelayedState,
-    lambda s: s.tree_flatten(),
-    lambda aux, ch: DelayedState.tree_unflatten(aux, ch))
-
-
-def init_delayed_state(params: PyTree, opt_init: Callable[[PyTree], PyTree],
-                       delta: int) -> DelayedState:
-    """Ring buffer starts filled with theta[0] (the paper's convention that
-    reads clipped below iteration 1 see the initial values)."""
-    hist = jax.tree.map(
-        lambda x: jnp.broadcast_to(x[None], (delta + 1,) + x.shape), params)
-    return DelayedState(params=params, hist=hist,
-                        ptr=jnp.zeros((), jnp.int32),
-                        opt_state=opt_init(params),
-                        step=jnp.zeros((), jnp.int32))
-
-
-def make_delayed_step(
-    grad_fn: Callable[[PyTree, Any], tuple[jnp.ndarray, PyTree]],
-    opt_update: Callable[[PyTree, PyTree, PyTree], tuple[PyTree, PyTree]],
-    delta: int,
-    delay_for: Callable[[tuple], int] | None = None,
-) -> Callable[[DelayedState, Any], tuple[DelayedState, dict]]:
-    """Build a jit-able delayed-gradient step.
-
-    grad_fn(params, batch) -> (loss, grads)
-    opt_update(grads, opt_state, params) -> (new_params, new_opt_state)
-    delay_for(path) -> per-leaf delay in [0, delta]; default: uniform delta.
-    """
-    size = delta + 1
-
-    def read_stale(state: DelayedState) -> PyTree:
-        def pick(path, hist_leaf):
-            d = delta if delay_for is None else min(delay_for(path), delta)
-            idx = jnp.mod(state.ptr - d, size)
-            return jax.lax.dynamic_index_in_dim(hist_leaf, idx, axis=0,
-                                                keepdims=False)
-        return jax.tree_util.tree_map_with_path(pick, state.hist)
-
-    def step(state: DelayedState, batch: Any) -> tuple[DelayedState, dict]:
-        stale_params = read_stale(state)
-        loss, grads = grad_fn(stale_params, batch)
-        new_params, new_opt = opt_update(grads, state.opt_state, state.params)
-        new_ptr = jnp.mod(state.ptr + 1, size)
-        new_hist = jax.tree.map(
-            lambda h, p: jax.lax.dynamic_update_index_in_dim(
-                h, p.astype(h.dtype), new_ptr, axis=0),
-            state.hist, new_params)
-        new_state = DelayedState(params=new_params, hist=new_hist,
-                                 ptr=new_ptr, opt_state=new_opt,
-                                 step=state.step + 1)
-        return new_state, {"loss": loss, "staleness": jnp.asarray(delta)}
-
-    return step
+    PyTree,
+    init_delayed_state,
+    make_delayed_step,
+)

@@ -23,6 +23,7 @@ import dataclasses
 
 BSP = "bsp"
 DATACENTRIC = "datacentric"
+SSP = "ssp"
 
 # Logical parameter axes used by the model zoo:
 #   vocab     — embedding / lm-head vocabulary dim
@@ -48,6 +49,8 @@ RULES = {
     DATACENTRIC: {**_TP_RULES, "embed": ("data",)},
     # bsp: parameters replicated over `data`; only tensor-parallel sharding
     BSP: {**_TP_RULES, "embed": ()},
+    # ssp: bounded-staleness baseline; shards the database like data-centric
+    SSP: {**_TP_RULES, "embed": ("data",)},
 }
 
 ACTIVATION_RULES = {
@@ -62,7 +65,7 @@ ACTIVATION_RULES = {
 @dataclasses.dataclass(frozen=True)
 class SyncConfig:
     """How parameter reads/writes are synchronized during training."""
-    mode: str = DATACENTRIC          # "bsp" | "datacentric"
+    mode: str = DATACENTRIC          # "bsp" | "datacentric" | "ssp"
     delta: int = 0                   # admissible staleness (Sec 7); 0 = exact
     compression: str = "none"        # "none" | "int8" gradient compression
     remat: str = "full"              # "none" | "full" | "dots"
@@ -70,7 +73,7 @@ class SyncConfig:
     group_delays: tuple[tuple[str, int], ...] = ()
 
     def __post_init__(self):
-        if self.mode not in (BSP, DATACENTRIC):
+        if self.mode not in (BSP, DATACENTRIC, SSP):
             raise ValueError(f"unknown sync mode {self.mode!r}")
         if self.delta < 0:
             raise ValueError("delta must be >= 0")
@@ -89,3 +92,10 @@ class SyncConfig:
             if s.startswith(prefix) and len(prefix) > best_len:
                 best, best_len = d, len(prefix)
         return best
+
+    def to_policy(self, n_workers: int, n_chunks: int | None = None):
+        """The ParameterDB consistency policy equivalent of this sync mode
+        (host-side backends: threads, in-process replay, simulator)."""
+        from ..pdb.policies import make_policy
+        name = {BSP: "bsp", DATACENTRIC: "dc", SSP: "ssp"}[self.mode]
+        return make_policy(name, n_workers, self.delta, n_chunks)

@@ -1,9 +1,11 @@
 """Live multi-threaded parameter-database runtime (paper Sec 6).
 
 Real Python threads train a feature-partitioned linear-regression model
-(the paper's prototype task) against a blocking parameter store that
-enforces either the BSP barriers (Algorithm 2a) or the data-centric RC/WC
-constraints (Algorithm 2b / Sec-7.1 protocol).
+(the paper's prototype task) against the blocking ParameterDB backend
+(:class:`repro.pdb.ThreadedParameterDB`), under any consistency policy:
+BSP barriers (Algorithm 2a), data-centric RC/WC constraints (Algorithm 2b /
+Sec-7.1 protocol, exact or delta-relaxed), SSP per-worker clocks, or
+unsynchronized Hogwild.
 
 Correctness property (the paper's central claim): with ``delta=0`` the final
 parameter vector is **bit-identical** to single-threaded sequential
@@ -11,6 +13,10 @@ execution, for GD, SGD and mini-batch — regardless of thread interleaving.
 This holds because each worker's chunk update is a deterministic function of
 the full-theta snapshot it read (whose value RC/WC pins to exactly the
 previous iteration's writes) and a shared, pre-drawn sample schedule.
+
+The blocking/wait-condition machinery lives entirely in
+:mod:`repro.pdb.db`; this module only provides the Sec-6 workload and the
+thread harness.
 """
 from __future__ import annotations
 
@@ -21,7 +27,8 @@ from typing import Literal
 
 import numpy as np
 
-from .history import Op, READ, WRITE
+from ..pdb import ThreadedParameterDB, make_policy
+from .history import Op
 
 
 @dataclasses.dataclass(frozen=True)
@@ -63,8 +70,8 @@ def chunk_slices(n_features: int, n_workers: int) -> list[slice]:
     return [slice(int(a), int(b)) for a, b in zip(bounds[:-1], bounds[1:])]
 
 
-def _chunk_update(task: LRTask, theta: np.ndarray, sl: slice, itr: int,
-                  schedule: np.ndarray | None) -> np.ndarray:
+def chunk_update(task: LRTask, theta: np.ndarray, sl: slice, itr: int,
+                 schedule: np.ndarray | None) -> np.ndarray:
     """New value for one feature chunk given a full-theta snapshot.
     Deterministic in (theta, itr) — the f_i of Equation 1."""
     X, y = task.X, task.y
@@ -86,80 +93,10 @@ def run_sequential(task: LRTask, n_workers: int) -> np.ndarray:
     theta = np.zeros(task.X.shape[1])
     for itr in range(1, task.n_iters + 1):
         snap = theta.copy()          # all reads precede all writes
-        news = [_chunk_update(task, snap, sl, itr, schedule) for sl in slices]
+        news = [chunk_update(task, snap, sl, itr, schedule) for sl in slices]
         for sl, v in zip(slices, news):
             theta[sl] = v
     return theta
-
-
-# ---------------------------------------------------------------------------
-# Blocking parameter stores
-# ---------------------------------------------------------------------------
-
-class RCWCStore:
-    """The Sec-5 / Sec-7.1 protocol as a blocking store.
-
-    read(worker, chunk, itr)  blocks until version[chunk] >= itr - 1 - delta
-    write(worker, chunk, itr) blocks until min_k last_read[chunk][k] >= itr - delta
-    """
-
-    def __init__(self, init_chunks: list[np.ndarray], n_workers: int,
-                 delta: int = 0, record: bool = False):
-        self.chunks = [c.copy() for c in init_chunks]
-        self.version = [0] * len(init_chunks)
-        self.last_read = [[0] * n_workers for _ in init_chunks]
-        self.delta = delta
-        self.cond = threading.Condition()
-        self.history: list[Op] | None = [] if record else None
-
-    def read(self, worker: int, chunk: int, itr: int) -> np.ndarray:
-        with self.cond:
-            self.cond.wait_for(
-                lambda: self.version[chunk] >= itr - 1 - self.delta)
-            val = self.chunks[chunk].copy()
-            self.last_read[chunk][worker] = itr
-            if self.history is not None:
-                self.history.append(Op(READ, worker, chunk, itr))
-            self.cond.notify_all()
-            return val
-
-    def write(self, worker: int, chunk: int, itr: int, value: np.ndarray) -> None:
-        with self.cond:
-            self.cond.wait_for(
-                lambda: min(self.last_read[chunk]) >= itr - self.delta)
-            self.chunks[chunk] = value
-            self.version[chunk] = itr
-            if self.history is not None:
-                self.history.append(Op(WRITE, worker, chunk, itr))
-            self.cond.notify_all()
-
-
-class BSPStore:
-    """Algorithm 2a: read barrier + write barrier around a plain store."""
-
-    def __init__(self, init_chunks: list[np.ndarray], n_workers: int,
-                 record: bool = False):
-        self.chunks = [c.copy() for c in init_chunks]
-        self.read_barrier = threading.Barrier(n_workers)
-        self.write_barrier = threading.Barrier(n_workers)
-        self.lock = threading.Lock()
-        self.history: list[Op] | None = [] if record else None
-
-    def read_all(self, worker: int, itr: int) -> list[np.ndarray]:
-        self.read_barrier.wait()     # wait for all writes of itr-1
-        with self.lock:
-            vals = [c.copy() for c in self.chunks]
-            if self.history is not None:
-                for j in range(len(self.chunks)):
-                    self.history.append(Op(READ, worker, j, itr))
-        return vals
-
-    def write(self, worker: int, chunk: int, itr: int, value: np.ndarray) -> None:
-        self.write_barrier.wait()    # wait for all reads of itr
-        with self.lock:
-            self.chunks[chunk] = value
-            if self.history is not None:
-                self.history.append(Op(WRITE, worker, chunk, itr))
 
 
 # ---------------------------------------------------------------------------
@@ -171,36 +108,34 @@ class RunStats:
     theta: np.ndarray
     wall_time: float
     history: list[Op] | None
+    staleness: dict | None = None
 
 
 def run_parallel(task: LRTask, n_workers: int, policy: str = "dc",
-                 delta: int = 0, record_history: bool = False) -> RunStats:
-    """Train with ``n_workers`` real threads under the given policy."""
+                 delta: float = 0, record_history: bool = False,
+                 timeout: float | None = 300.0) -> RunStats:
+    """Train with ``n_workers`` real threads under the given policy
+    ("bsp" | "dc" | "dc-array" | "ssp" | "hogwild").  ``timeout`` bounds
+    each blocked DB op (None blocks forever)."""
     d = task.X.shape[1]
     slices = chunk_slices(d, n_workers)
     schedule = task.sample_schedule()
     init = [np.zeros(sl.stop - sl.start) for sl in slices]
 
-    if policy == "bsp":
-        store: RCWCStore | BSPStore = BSPStore(init, n_workers, record_history)
-    elif policy == "dc":
-        store = RCWCStore(init, n_workers, delta, record_history)
-    else:
-        raise ValueError(f"unknown policy {policy!r}")
+    db = ThreadedParameterDB(
+        init, n_workers,
+        policy=make_policy(policy, n_workers, delta, n_chunks=n_workers),
+        record=record_history, timeout=timeout)
 
     errors: list[BaseException] = []
 
     def worker(i: int) -> None:
         try:
             for itr in range(1, task.n_iters + 1):
-                if policy == "bsp":
-                    vals = store.read_all(i, itr)          # type: ignore[union-attr]
-                else:
-                    vals = [store.read(i, j, itr)          # type: ignore[union-attr]
-                            for j in range(n_workers)]
+                vals = db.read_all(i, itr)
                 theta = np.concatenate(vals)
-                new = _chunk_update(task, theta, slices[i], itr, schedule)
-                store.write(i, i, itr, new)
+                new = chunk_update(task, theta, slices[i], itr, schedule)
+                db.write(i, i, itr, new)
         except BaseException as e:  # surface thread failures to the caller
             errors.append(e)
             raise
@@ -211,14 +146,13 @@ def run_parallel(task: LRTask, n_workers: int, policy: str = "dc",
     for t in threads:
         t.start()
     for t in threads:
-        t.join(timeout=300)
+        t.join(timeout=timeout)
     wall = time.perf_counter() - t0
     if errors:
         raise errors[0]
     if any(t.is_alive() for t in threads):
         raise RuntimeError("worker threads did not terminate (deadlock?)")
-    theta = np.concatenate([c for c in store.chunks])
-    return RunStats(theta, wall, store.history)
+    return RunStats(db.theta(), wall, db.history, db.telemetry.summary())
 
 
 def loss(task: LRTask, theta: np.ndarray) -> float:

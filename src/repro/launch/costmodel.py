@@ -32,6 +32,15 @@ from .sharding import resolve_spec, tree_shardings
 SDS = jax.ShapeDtypeStruct
 
 
+def cost_dict(compiled) -> dict:
+    """``compiled.cost_analysis()`` across jax versions: newer versions
+    return the per-device dict directly, older ones a one-element list."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost if cost is not None else {}
+
+
 def _slot_specs_for_group(cfg: ModelConfig, gi: int):
     """Abstract per-layer (leading scan dim removed) params for group gi,
     with matching shardings."""
@@ -169,7 +178,7 @@ def group_body_cost(cfg: ModelConfig, gi: int, mesh, rules, kind: str,
     with mesh:
         compiled = jax.jit(body2, in_shardings=shardings) \
             .lower(*args).compile()
-        cost = compiled.cost_analysis()
+        cost = cost_dict(compiled)
         coll = parse_collectives(compiled.as_text())
     flops = float(cost.get("flops", 0.0))
     byts = float(cost.get("bytes accessed", 0.0))
@@ -189,7 +198,7 @@ def group_body_cost(cfg: ModelConfig, gi: int, mesh, rules, kind: str,
         with mesh:
             fcomp = jax.jit(fwd2, in_shardings=fshard) \
                 .lower(*fargs).compile()
-            fcost = fcomp.cost_analysis()
+            fcost = cost_dict(fcomp)
             fcoll = parse_collectives(fcomp.as_text())
         flops += float(fcost.get("flops", 0.0))
         byts += float(fcost.get("bytes accessed", 0.0))

@@ -189,7 +189,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         t_compile = time.time() - t0 - t_lower
 
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis()
+        from .costmodel import cost_dict
+        cost = cost_dict(compiled)
         hlo = compiled.as_text()
     coll = parse_collective_bytes(hlo)
 

@@ -14,7 +14,7 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
-from ..core.staleness import DelayedState, init_delayed_state, make_delayed_step
+from ..pdb.jax_backend import TrainEngine, make_engine
 from ..core.sync_jax import SyncConfig
 from ..models.config import ModelConfig
 from ..models.transformer import decode_step as model_decode
@@ -35,16 +35,21 @@ def make_train_step(cfg: ModelConfig, opt: Optimizer, sync: SyncConfig,
     return train_step
 
 
-def make_delayed_train_step(cfg: ModelConfig, opt: Optimizer,
-                            sync: SyncConfig) -> Callable:
-    """Delta-staleness variant: (DelayedState, batch) -> (DelayedState, mx)."""
+def make_lm_grad_fn(cfg: ModelConfig, sync: SyncConfig) -> Callable:
+    """grad_fn(params, batch) -> (loss, grads) over the LM loss."""
     def grad_fn(params, batch):
         (loss, _), grads = jax.value_and_grad(
             lm_loss, has_aux=True)(params, batch, cfg, remat=sync.remat)
         return loss, grads
+    return grad_fn
 
-    delay_for = sync.delay_for if sync.group_delays else None
-    return make_delayed_step(grad_fn, opt.update, sync.delta, delay_for)
+
+def make_train_engine(cfg: ModelConfig, opt: Optimizer, sync: SyncConfig,
+                      params: Any, record_history: bool = False) -> TrainEngine:
+    """The unified ParameterDB train engine (both sync and delayed paths)
+    used by the training driver; see :mod:`repro.pdb.jax_backend`."""
+    return make_engine(params, make_lm_grad_fn(cfg, sync), opt, sync,
+                       record_history=record_history)
 
 
 def make_prefill_step(cfg: ModelConfig, cache_len: int,

@@ -2,8 +2,9 @@
 
 Runs the real training loop (any zoo arch at reduced scale, or the full
 config if you have the hardware) with:
-  * bsp vs datacentric parameter layouts (sync mode),
-  * delta-staleness via the DelayedGradientEngine,
+  * bsp vs datacentric vs ssp parameter layouts (sync mode),
+  * delta-staleness via the unified ParameterDB train engine
+    (repro.pdb.jax_backend), with Op/staleness telemetry,
   * atomic checkpointing + auto-resume (--resume),
   * failure injection drills (--fail-at-step), and
   * deterministic data (batch t depends only on (seed, t)).
@@ -24,7 +25,6 @@ import jax.numpy as jnp
 
 from ..checkpoint import latest_step, load_checkpoint, save_checkpoint
 from ..configs import get_config, get_smoke_config
-from ..core.staleness import init_delayed_state
 from ..core.sync_jax import SyncConfig
 from ..data import LMBatchSpec, make_lm_batch
 from ..models import paramlib
@@ -32,7 +32,7 @@ from ..models.transformer import model_specs
 from ..optim import OptConfig, make_optimizer
 from ..runtime.fault import FailureInjector, InjectedFailure, RetryPolicy, \
     run_with_recovery
-from .steps import make_delayed_train_step, make_train_step
+from .steps import make_train_engine
 
 
 def build(args):
@@ -61,7 +61,7 @@ def main(argv=None) -> dict:
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--optimizer", default="adamw")
-    ap.add_argument("--mode", choices=["datacentric", "bsp"],
+    ap.add_argument("--mode", choices=["datacentric", "bsp", "ssp"],
                     default="datacentric")
     ap.add_argument("--delta", type=int, default=0)
     ap.add_argument("--compression", choices=["none", "int8"], default="none")
@@ -78,18 +78,10 @@ def main(argv=None) -> dict:
     cfg, params, opt, sync, spec = build(args)
     start = 0
 
-    if args.delta > 0:
-        state = init_delayed_state(params, opt.init, args.delta)
-        raw_step = make_delayed_train_step(cfg, opt, sync)
-        step_fn = jax.jit(raw_step)
-        def unpack(s): return s
-    else:
-        opt_state = opt.init(params)
-        train_step = jax.jit(make_train_step(cfg, opt, sync))
-        state = {"params": params, "opt": opt_state}
-        def step_fn(s, batch):
-            p, o, m = train_step(s["params"], s["opt"], batch)
-            return {"params": p, "opt": o}, m
+    # one ParameterDB engine for both paths (sync dict state at delta=0,
+    # device ring buffer otherwise) — see repro.pdb.jax_backend
+    engine = make_train_engine(cfg, opt, sync, params)
+    state = engine.init_state()
 
     if args.resume and args.ckpt_dir:
         ls = latest_step(args.ckpt_dir)
@@ -108,11 +100,14 @@ def main(argv=None) -> dict:
         batch = make_lm_batch(spec, step)
         try:
             state, metrics, outcome = run_with_recovery(
-                step_fn, state, batch, step, policy, injector,
-                is_finite=lambda m: bool(jnp.isfinite(m["loss"]).all()))
+                engine.step_fn, state, batch, step, policy, injector,
+                is_finite=lambda m: bool(jnp.isfinite(m["loss"]).all()),
+                telemetry=engine.telemetry)
         except InjectedFailure:
             print(f"CRASH at step {step} (injected); restart with --resume")
             raise SystemExit(17)
+        if outcome != "skipped":    # skipped steps never updated parameters
+            engine.record_step()
         loss = float(metrics["loss"])
         losses.append(loss)
         if step % args.log_every == 0 or step == args.steps - 1:
@@ -120,10 +115,19 @@ def main(argv=None) -> dict:
                   f"{(time.time()-t0):.1f}s", flush=True)
         if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
             save_checkpoint(args.ckpt_dir, step + 1, state)
+    tele = engine.telemetry.summary()
+    if not losses:   # resumed from a checkpoint at/after the last step:
+        # don't re-save — it would label step-`start` weights as args.steps
+        print(f"nothing to do: resumed at step {start} >= {args.steps}")
+        return {"first_loss": None, "final_loss": None, "telemetry": tele}
     if args.ckpt_dir:
         save_checkpoint(args.ckpt_dir, args.steps, state)
-    print(f"final loss {losses[-1]:.4f} (first {losses[0]:.4f})")
-    return {"first_loss": losses[0], "final_loss": losses[-1]}
+    print(f"final loss {losses[-1]:.4f} (first {losses[0]:.4f}) "
+          f"[pdb: {tele['reads']}r/{tele['writes']}w "
+          f"max_staleness={tele['max_staleness']:.0f} "
+          f"retried={tele['retried_steps']} skipped={tele['skipped_steps']}]")
+    return {"first_loss": losses[0], "final_loss": losses[-1],
+            "telemetry": tele}
 
 
 if __name__ == "__main__":

@@ -1,0 +1,42 @@
+"""The parameter database: one consistency layer, three backends.
+
+This package is the repo's single implementation of the paper's
+contribution — a parameter *database* whose read/write admission is decided
+by a pluggable **consistency policy** and whose execution is provided by a
+pluggable **backend**:
+
+  policies     — BSP barriers (Alg 2a), Sec-5 RC/WC bit vector, Sec-7.1
+                 delta admissible delay (uniform or per-chunk), SSP
+                 per-worker clocks
+  db           — in-process numpy backend (raises on inadmissible ops) and
+                 blocking-threaded backend (one condition variable)
+  jax_backend  — device ring buffer of the last delta+1 parameter versions
+                 + the unified TrainEngine used by repro.launch.train
+  telemetry    — shared Op-history recording and staleness statistics
+
+Every backend emits the same :class:`repro.core.history.Op` history, so
+``repro.core.history.is_sequentially_correct`` is the semantic oracle for
+all execution modes; ``tests/test_pdb_conformance.py`` holds the
+policy x backend conformance matrix.
+
+The legacy entry points (``repro.core.scheduler``, ``repro.core.threaded``,
+``repro.core.staleness``) are thin shims over this package.
+"""
+from .db import (InProcessParameterDB, InadmissibleOp, ParameterDB,  # noqa: F401
+                 ThreadedParameterDB, run_interleaved)
+from .policies import (POLICIES, BSPPolicy, BitVectorPolicy, DeltaPolicy,  # noqa: F401
+                       Policy, SSPPolicy, make_policy, random_schedule,
+                       ssp_clock_bound_violations)
+from .telemetry import StalenessStats, Telemetry  # noqa: F401
+
+_JAX_EXPORTS = ("DelayedState", "TrainEngine", "init_delayed_state",
+                "make_delayed_step", "make_engine")
+
+
+def __getattr__(name):
+    # the device backend pulls in jax; load it only when actually used so
+    # the pure-python policies/backends stay importable without it
+    if name in _JAX_EXPORTS:
+        from . import jax_backend
+        return getattr(jax_backend, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

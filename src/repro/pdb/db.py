@@ -1,0 +1,192 @@
+"""The ParameterDB: one consistency layer, many execution backends.
+
+A :class:`ParameterDB` holds the chunked parameter vector and admits
+``read(worker, chunk, itr)`` / ``write(worker, chunk, itr, value)`` under a
+pluggable consistency :mod:`policy <repro.pdb.policies>`.  The *only*
+difference between backends is what happens when an operation is not yet
+admissible:
+
+  * :class:`InProcessParameterDB` raises :class:`InadmissibleOp` — callers
+    (the interleaved replay driver below, conformance tests, simulators)
+    choose their own op order and must only issue admissible ops;
+  * :class:`ThreadedParameterDB` blocks the calling thread on one shared
+    condition variable until the policy admits the op — the single
+    wait-condition implementation behind what used to be three divergent
+    stores (``RCWCStore``, ``BSPStore``, and the ad-hoc launch path).
+
+Both record the identical Op history and staleness telemetry through
+:class:`repro.pdb.telemetry.Telemetry`, so
+``repro.core.history.is_sequentially_correct`` applies to every backend.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Callable, Sequence
+
+import numpy as np
+
+from .policies import Policy, make_policy
+from .telemetry import Telemetry
+
+
+class InadmissibleOp(RuntimeError):
+    """A non-blocking backend was asked to execute an op its policy rejects."""
+
+
+class ParameterDB:
+    """Shared storage + admission + telemetry; subclasses define waiting."""
+
+    def __init__(self, init_chunks: Sequence[np.ndarray], n_workers: int,
+                 policy: Policy | str = "dc",
+                 delta: float | Sequence[float] = 0,
+                 record: bool = False):
+        self.chunks = [np.array(c, copy=True) for c in init_chunks]
+        self.p = n_workers
+        self.m = len(self.chunks)
+        if isinstance(policy, str):
+            policy = make_policy(policy, n_workers, delta, n_chunks=self.m)
+        self.policy = policy
+        # last committed iteration per chunk, for staleness telemetry
+        # (kept here, not in the policy: SSP has no chunk versions)
+        self._version = [0] * self.m
+        self.telemetry = Telemetry(record_history=record)
+
+    # -- admission passthroughs (for drivers that pick their own op order) --
+    def can_read(self, worker: int, chunk: int, itr: int) -> bool:
+        return self.policy.can_read(worker, chunk, itr)
+
+    def can_write(self, worker: int, chunk: int, itr: int) -> bool:
+        return self.policy.can_write(worker, chunk, itr)
+
+    @property
+    def history(self):
+        return self.telemetry.history
+
+    def values(self) -> list[np.ndarray]:
+        return [c.copy() for c in self.chunks]
+
+    def theta(self) -> np.ndarray:
+        return np.concatenate(self.chunks)
+
+    # -- the commit bodies shared by every subclass (call under exclusion) --
+    def _do_read(self, worker: int, chunk: int, itr: int) -> np.ndarray:
+        val = self.chunks[chunk].copy()
+        self.policy.did_read(worker, chunk, itr)
+        self.telemetry.on_read(worker, chunk, itr, self._version[chunk])
+        return val
+
+    def _do_write(self, worker: int, chunk: int, itr: int,
+                  value: np.ndarray) -> None:
+        self.chunks[chunk] = np.asarray(value)
+        self._version[chunk] = max(self._version[chunk], itr)
+        self.policy.did_write(worker, chunk, itr)
+        self.telemetry.on_write(worker, chunk, itr)
+
+
+class InProcessParameterDB(ParameterDB):
+    """Non-blocking numpy backend: inadmissible ops raise."""
+
+    def read(self, worker: int, chunk: int, itr: int) -> np.ndarray:
+        if not self.policy.can_read(worker, chunk, itr):
+            raise InadmissibleOp(f"r{worker}[pi{chunk}][{itr}]")
+        return self._do_read(worker, chunk, itr)
+
+    def write(self, worker: int, chunk: int, itr: int,
+              value: np.ndarray) -> None:
+        if not self.policy.can_write(worker, chunk, itr):
+            raise InadmissibleOp(f"w{worker}[pi{chunk}][{itr}]")
+        self._do_write(worker, chunk, itr, value)
+
+
+class ThreadedParameterDB(ParameterDB):
+    """Blocking backend: one condition variable, admission by the policy.
+
+    read  blocks until policy.can_read(worker, chunk, itr)
+    write blocks until policy.can_write(worker, chunk, itr)
+
+    This subsumes both Algorithm 2a (BSP barriers) and Algorithm 2b / the
+    Sec-7.1 protocol: the barrier-vs-constraint distinction lives entirely
+    in the policy's admission predicates.
+    """
+
+    def __init__(self, *args, timeout: float | None = 300.0, **kwargs):
+        super().__init__(*args, **kwargs)
+        self.cond = threading.Condition()
+        self.timeout = timeout
+
+    def _wait_for(self, pred: Callable[[], bool], what: str) -> None:
+        if not self.cond.wait_for(pred, timeout=self.timeout):
+            raise RuntimeError(f"ParameterDB wait timed out on {what} "
+                               f"(policy={type(self.policy).__name__})")
+
+    def read(self, worker: int, chunk: int, itr: int) -> np.ndarray:
+        with self.cond:
+            self._wait_for(
+                lambda: self.policy.can_read(worker, chunk, itr),
+                f"r{worker}[pi{chunk}][{itr}]")
+            val = self._do_read(worker, chunk, itr)
+            self.cond.notify_all()
+            return val
+
+    def read_all(self, worker: int, itr: int) -> list[np.ndarray]:
+        """Read every chunk for this iteration (in admission order)."""
+        return [self.read(worker, j, itr) for j in range(self.m)]
+
+    def write(self, worker: int, chunk: int, itr: int,
+              value: np.ndarray) -> None:
+        with self.cond:
+            self._wait_for(
+                lambda: self.policy.can_write(worker, chunk, itr),
+                f"w{worker}[pi{chunk}][{itr}]")
+            self._do_write(worker, chunk, itr, value)
+            self.cond.notify_all()
+
+
+# ---------------------------------------------------------------------------
+# Deterministic interleaved driver (in-process backend)
+# ---------------------------------------------------------------------------
+
+UpdateFn = Callable[[int, np.ndarray, int], np.ndarray]
+# update(worker, full_theta_snapshot, itr) -> new value for worker's chunk
+
+
+def run_interleaved(db: InProcessParameterDB, n_iters: int,
+                    update: UpdateFn, seed: int = 0) -> np.ndarray:
+    """Drive every worker's Def-3 program (read all chunks, compute, write
+    own chunk) through ``db``, choosing uniformly at random among the
+    admissible next ops — a seeded single-threaded model of an arbitrary
+    parallel interleaving.  Deterministic given ``seed``; raises if the
+    policy ever deadlocks.  Returns the final concatenated theta."""
+    import random as _random
+
+    rng = _random.Random(seed)
+    p, m = db.p, db.m
+    itr = [1] * p
+    unread = [set(range(m)) for _ in range(p)]
+    buffers: list[dict[int, np.ndarray]] = [{} for _ in range(p)]
+
+    while any(a <= n_iters for a in itr):
+        moves: list[tuple[str, int, int]] = []
+        for i in range(p):
+            if itr[i] > n_iters:
+                continue
+            if unread[i]:
+                moves += [("r", i, j) for j in sorted(unread[i])
+                          if db.can_read(i, j, itr[i])]
+            elif db.can_write(i, i, itr[i]):
+                moves.append(("w", i, i))
+        if not moves:
+            raise RuntimeError(
+                f"deadlock in run_interleaved "
+                f"(policy={type(db.policy).__name__})")
+        kind, i, j = rng.choice(moves)
+        if kind == "r":
+            buffers[i][j] = db.read(i, j, itr[i])
+            unread[i].discard(j)
+        else:
+            snap = np.concatenate([buffers[i][k] for k in range(m)])
+            db.write(i, i, itr[i], update(i, snap, itr[i]))
+            itr[i] += 1
+            unread[i] = set(range(m))
+            buffers[i] = {}
+    return db.theta()

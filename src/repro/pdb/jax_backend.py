@@ -1,0 +1,198 @@
+"""JAX device backend of the ParameterDB: the delta-staleness ring buffer.
+
+On SPMD hardware there is no intra-program asynchrony, so the paper's
+admissible-delay semantics is mapped onto *steps*: the gradient at step
+``alpha`` is evaluated at the parameters of step ``alpha - delta`` and
+applied to the parameters of step ``alpha``.  A ring buffer holds the last
+``delta + 1`` parameter versions; per-partition-group delays (the Sec-7.1
+per-chunk version arrays) let different parts of the model read different
+staleness levels.
+
+``delta = 0`` is bit-identical to synchronous training (asserted in
+tests/test_staleness_jax.py and the pdb conformance suite) — the Sec-4
+sequential-correctness guarantee.  ``delta = inf`` has no finite buffer;
+the engine caps at the configured delta, which is the bounded-staleness
+regime of SSP/parameter-server work the paper positions itself against.
+
+:class:`TrainEngine` wraps both the plain synchronous path (delta=0, no
+ring-buffer overhead) and the delayed path behind one step interface, with
+the same Op-history / staleness telemetry as the other backends: each
+training step is the single logical SPMD worker executing its Def-3 program
+over the partition groups (read every group at its configured delay, write
+every group), validated against a :class:`repro.pdb.policies.DeltaPolicy`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from .telemetry import Telemetry
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class DelayedState:
+    params: PyTree          # current theta[alpha]
+    hist: PyTree            # stacked (delta+1, ...) ring buffer of versions
+    ptr: jnp.ndarray        # ring position of theta[alpha]
+    opt_state: PyTree
+    step: jnp.ndarray
+
+    def tree_flatten(self):
+        return ((self.params, self.hist, self.ptr, self.opt_state, self.step),
+                None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+jax.tree_util.register_pytree_node(
+    DelayedState,
+    lambda s: s.tree_flatten(),
+    lambda aux, ch: DelayedState.tree_unflatten(aux, ch))
+
+
+def init_delayed_state(params: PyTree, opt_init: Callable[[PyTree], PyTree],
+                       delta: int) -> DelayedState:
+    """Ring buffer starts filled with theta[0] (the paper's convention that
+    reads clipped below iteration 1 see the initial values)."""
+    hist = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (delta + 1,) + x.shape), params)
+    return DelayedState(params=params, hist=hist,
+                        ptr=jnp.zeros((), jnp.int32),
+                        opt_state=opt_init(params),
+                        step=jnp.zeros((), jnp.int32))
+
+
+def make_delayed_step(
+    grad_fn: Callable[[PyTree, Any], tuple[jnp.ndarray, PyTree]],
+    opt_update: Callable[[PyTree, PyTree, PyTree], tuple[PyTree, PyTree]],
+    delta: int,
+    delay_for: Callable[[tuple], int] | None = None,
+) -> Callable[[DelayedState, Any], tuple[DelayedState, dict]]:
+    """Build a jit-able delayed-gradient step.
+
+    grad_fn(params, batch) -> (loss, grads)
+    opt_update(grads, opt_state, params) -> (new_params, new_opt_state)
+    delay_for(path) -> per-leaf delay in [0, delta]; default: uniform delta.
+    """
+    size = delta + 1
+
+    def read_stale(state: DelayedState) -> PyTree:
+        def pick(path, hist_leaf):
+            d = delta if delay_for is None else min(delay_for(path), delta)
+            idx = jnp.mod(state.ptr - d, size)
+            return jax.lax.dynamic_index_in_dim(hist_leaf, idx, axis=0,
+                                                keepdims=False)
+        return jax.tree_util.tree_map_with_path(pick, state.hist)
+
+    def step(state: DelayedState, batch: Any) -> tuple[DelayedState, dict]:
+        stale_params = read_stale(state)
+        loss, grads = grad_fn(stale_params, batch)
+        new_params, new_opt = opt_update(grads, state.opt_state, state.params)
+        new_ptr = jnp.mod(state.ptr + 1, size)
+        new_hist = jax.tree.map(
+            lambda h, p: jax.lax.dynamic_update_index_in_dim(
+                h, p.astype(h.dtype), new_ptr, axis=0),
+            state.hist, new_params)
+        new_state = DelayedState(params=new_params, hist=new_hist,
+                                 ptr=new_ptr, opt_state=new_opt,
+                                 step=state.step + 1)
+        return new_state, {"loss": loss, "staleness": jnp.asarray(delta)}
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Unified train engine (the one JAX entry point for launch/train.py)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TrainEngine:
+    """One step interface over both JAX execution paths.
+
+    ``step(state, batch)`` runs the jitted update and records the step's
+    Def-3 ops (one logical worker, one chunk per partition group) into the
+    shared telemetry.  The recorded version of each read mirrors the ring
+    buffer's indexing (reads clipped below step 1 see the initial values),
+    so warmup staleness ramps 0..delay exactly as on device.
+
+    Drivers that may *discard* a step's result (e.g. the fault layer
+    skipping a non-finite step) should call ``step_fn`` directly and then
+    ``record_step()`` only for accepted steps, so the Op history matches
+    the actual parameter evolution.
+    """
+
+    init_state: Callable[[], Any]
+    step_fn: Callable[[Any, Any], tuple[Any, dict]]   # jitted
+    telemetry: Telemetry
+    delta: int
+    group_delays: tuple[int, ...]                     # delay per chunk/group
+
+    def __post_init__(self):
+        self._itr = 0
+
+    def step(self, state: Any, batch: Any) -> tuple[Any, dict]:
+        new_state, metrics = self.step_fn(state, batch)
+        self.record_step()
+        return new_state, metrics
+
+    def record_step(self) -> None:
+        """Log one committed step's ops into the shared telemetry."""
+        self._itr += 1
+        itr = self._itr
+        for g, d in enumerate(self.group_delays):
+            self.telemetry.on_read(0, g, itr, version=max(itr - 1 - d, 0))
+        for g in range(len(self.group_delays)):
+            self.telemetry.on_write(0, g, itr)
+
+    @property
+    def history(self):
+        return self.telemetry.history
+
+
+def make_engine(params: PyTree,
+                grad_fn: Callable[[PyTree, Any], tuple[jnp.ndarray, PyTree]],
+                opt: Any, sync: Any,
+                record_history: bool = False) -> TrainEngine:
+    """Build the unified engine from a grad function and a SyncConfig-like
+    object (``delta``, ``group_delays``, ``delay_for``).
+
+    delta == 0 and no group delays: plain synchronous dict state
+    {"params", "opt"} (checkpoint-compatible with the historical layout);
+    otherwise: :class:`DelayedState` ring buffer with per-group delays.
+    """
+    delta = int(getattr(sync, "delta", 0))
+    group_delays_cfg = tuple(getattr(sync, "group_delays", ()) or ())
+    leaves = jax.tree_util.tree_leaves_with_path(params)
+    if delta > 0 and group_delays_cfg:
+        delay_fn = sync.delay_for
+        delays = tuple(min(delay_fn(path), delta) for path, _ in leaves)
+    else:
+        delays = tuple(delta for _ in leaves)
+    telemetry = Telemetry(record_history=record_history)
+
+    if delta == 0:
+        def sync_step(state, batch):
+            loss, grads = grad_fn(state["params"], batch)
+            new_params, new_opt = opt.update(grads, state["opt"],
+                                             state["params"])
+            return ({"params": new_params, "opt": new_opt},
+                    {"loss": loss, "staleness": jnp.zeros((), jnp.int32)})
+
+        return TrainEngine(
+            init_state=lambda: {"params": params, "opt": opt.init(params)},
+            step_fn=jax.jit(sync_step),
+            telemetry=telemetry, delta=0, group_delays=delays)
+
+    delay_for = sync.delay_for if group_delays_cfg else None
+    raw = make_delayed_step(grad_fn, opt.update, delta, delay_for)
+    return TrainEngine(
+        init_state=lambda: init_delayed_state(params, opt.init, delta),
+        step_fn=jax.jit(raw),
+        telemetry=telemetry, delta=delta, group_delays=delays)

@@ -1,0 +1,251 @@
+"""Consistency policies of the parameter database (paper Secs 4-5, 7.1).
+
+A *policy* is the pure-bookkeeping admission engine behind every execution
+backend: ``can_read / can_write`` test whether a Def-3 operation is
+admissible right now, ``did_read / did_write`` record its completion.
+Policies never block and never hold values — backends (``repro.pdb.db``,
+``repro.pdb.jax_backend``, the simulator) compose a policy with storage.
+
+  * :class:`BitVectorPolicy` — the Sec-5 protocol verbatim: one bit per
+    worker per chunk gates writes; a per-chunk iteration number gates reads.
+    Enforces exact sequential semantics (delta = 0).
+  * :class:`DeltaPolicy`     — the Sec-7.1 revised protocol: per-chunk
+    last-read iteration arrays; admissible delay ``delta >= 0``, uniform or
+    per-chunk.  ``delta=0`` coincides with :class:`BitVectorPolicy`;
+    ``delta=inf`` degenerates to Hogwild!-style fully asynchronous execution.
+  * :class:`BSPPolicy`       — the Algorithm-2a baseline: global read and
+    write barriers expressed as admission predicates.
+  * :class:`SSPPolicy`       — stale-synchronous-parallel (Petuum / Cipar et
+    al.): per-worker clocks; a worker may start iteration ``alpha`` only if
+    the slowest worker's clock is within ``slack``.  Writes are never gated,
+    so SSP does *not* satisfy WC — it bounds divergence instead of
+    eliminating it (the regime the paper positions itself against).
+"""
+from __future__ import annotations
+
+import math
+from typing import Protocol, Sequence
+
+
+class Policy(Protocol):
+    def can_read(self, worker: int, chunk: int, itr: int) -> bool: ...
+    def can_write(self, worker: int, chunk: int, itr: int) -> bool: ...
+    def did_read(self, worker: int, chunk: int, itr: int) -> None: ...
+    def did_write(self, worker: int, chunk: int, itr: int) -> None: ...
+
+
+class BitVectorPolicy:
+    """Sec 5: 'a write on pi_i can be executed if this chunk has been read by
+    all the worker processes in their alpha-th iterations' (bit vector), and
+    'a read [at alpha+1] can be executed if [the chunk's] iteration number is
+    one less than the iteration number in the read operation'."""
+
+    name = "dc"
+    sequential_at_zero = True
+
+    def __init__(self, n_workers: int, n_chunks: int | None = None):
+        self.p = n_workers
+        self.m = n_chunks if n_chunks is not None else n_workers
+        # start as if freshly written (version 0, bits zeroed): iteration-1
+        # writes must wait for every worker's iteration-1 read of the chunk
+        self.bits = [[False] * self.p for _ in range(self.m)]
+        self.version = [0] * self.m  # iteration number of last executed write
+
+    def can_read(self, worker: int, chunk: int, itr: int) -> bool:
+        return self.version[chunk] == itr - 1
+
+    def did_read(self, worker: int, chunk: int, itr: int) -> None:
+        self.bits[chunk][worker] = True
+
+    def can_write(self, worker: int, chunk: int, itr: int) -> bool:
+        return all(self.bits[chunk])
+
+    def did_write(self, worker: int, chunk: int, itr: int) -> None:
+        self.bits[chunk] = [False] * self.p  # 'all bits are set to zero'
+        self.version[chunk] = itr
+
+
+class DeltaPolicy:
+    """Sec 7.1: per-chunk last-read iteration array + chunk version.
+
+    Read  r_i[pi_j][alpha] admissible iff version[j] >= alpha - 1 - delta_j.
+    Write w_i[pi_i][alpha] admissible iff min_k last_read[i][k] >= alpha - delta_i.
+
+    ``delta`` may be a scalar (uniform admissible delay) or a per-chunk
+    sequence — the per-partition-group delays of Sec 7.1 (and of
+    ``SyncConfig.group_delays`` on the JAX backend).
+    """
+
+    name = "dc-array"
+    sequential_at_zero = True
+
+    def __init__(self, n_workers: int, delta: float | Sequence[float] = 0,
+                 n_chunks: int | None = None):
+        self.p = n_workers
+        if isinstance(delta, (int, float)):
+            self.m = n_chunks if n_chunks is not None else n_workers
+            deltas = [delta] * self.m
+        else:
+            deltas = list(delta)
+            self.m = n_chunks if n_chunks is not None else len(deltas)
+            if len(deltas) != self.m:
+                raise ValueError("per-chunk delta length != n_chunks")
+        if any(d < 0 for d in deltas):
+            raise ValueError("delta must be >= 0")
+        self.deltas = deltas
+        self.version = [0] * self.m
+        self.last_read = [[0] * self.p for _ in range(self.m)]
+
+    @property
+    def delta(self) -> float:
+        """The uniform delay (max over chunks for heterogeneous configs)."""
+        return max(self.deltas)
+
+    def can_read(self, worker: int, chunk: int, itr: int) -> bool:
+        return self.version[chunk] >= itr - 1 - self.deltas[chunk]
+
+    def did_read(self, worker: int, chunk: int, itr: int) -> None:
+        self.last_read[chunk][worker] = max(self.last_read[chunk][worker], itr)
+
+    def can_write(self, worker: int, chunk: int, itr: int) -> bool:
+        return min(self.last_read[chunk]) >= itr - self.deltas[chunk]
+
+    def did_write(self, worker: int, chunk: int, itr: int) -> None:
+        self.version[chunk] = max(self.version[chunk], itr)
+
+    @property
+    def hogwild(self) -> bool:
+        return all(math.isinf(d) for d in self.deltas)
+
+
+class BSPPolicy:
+    """Algorithm 2a expressed as admission predicates.
+
+    Read barrier:  no read of iteration alpha+1 until *every* worker's write
+    of iteration alpha has executed.
+    Write barrier: no write of iteration alpha until *every* worker has
+    finished *all* its reads of iteration alpha.
+    """
+
+    name = "bsp"
+    sequential_at_zero = True
+
+    def __init__(self, n_workers: int, n_chunks: int | None = None):
+        self.p = n_workers
+        self.m = n_chunks if n_chunks is not None else n_workers
+        self.writes_done = [0] * self.p      # writes_done[i] = last iter i wrote
+        self.reads_done = [[0] * self.m for _ in range(self.p)]
+        # reads_done[i][j] = last iter in which worker i read chunk j
+
+    def can_read(self, worker: int, chunk: int, itr: int) -> bool:
+        return all(v >= itr - 1 for v in self.writes_done)
+
+    def did_read(self, worker: int, chunk: int, itr: int) -> None:
+        self.reads_done[worker][chunk] = max(self.reads_done[worker][chunk], itr)
+
+    def can_write(self, worker: int, chunk: int, itr: int) -> bool:
+        return all(self.reads_done[i][j] >= itr
+                   for i in range(self.p) for j in range(self.m))
+
+    def did_write(self, worker: int, chunk: int, itr: int) -> None:
+        self.writes_done[worker] = max(self.writes_done[worker], itr)
+
+
+class SSPPolicy:
+    """Stale synchronous parallel: per-worker clocks, bounded divergence.
+
+    ``clock[i]`` is the last iteration worker ``i`` committed.  A read at
+    iteration ``alpha`` is admissible iff ``min_k clock[k] >= alpha-1-slack``
+    (the fastest worker is at most ``slack`` iterations ahead of the slowest);
+    writes are never gated.  ``slack=0`` is BSP's read barrier *without* the
+    write barrier — histories are clock-bounded but not sequentially correct,
+    which is exactly the contrast the paper draws with RC/WC.
+    """
+
+    name = "ssp"
+    sequential_at_zero = False
+
+    def __init__(self, n_workers: int, slack: float = 0,
+                 n_chunks: int | None = None):
+        if slack < 0:
+            raise ValueError("slack must be >= 0")
+        self.p = n_workers
+        self.m = n_chunks if n_chunks is not None else n_workers
+        self.slack = slack
+        self.clock = [0] * self.p
+
+    def can_read(self, worker: int, chunk: int, itr: int) -> bool:
+        return min(self.clock) >= itr - 1 - self.slack
+
+    def did_read(self, worker: int, chunk: int, itr: int) -> None:
+        pass
+
+    def can_write(self, worker: int, chunk: int, itr: int) -> bool:
+        return True
+
+    def did_write(self, worker: int, chunk: int, itr: int) -> None:
+        self.clock[worker] = max(self.clock[worker], itr)
+
+
+POLICIES = ("bsp", "dc", "dc-array", "ssp", "hogwild")
+
+
+def make_policy(policy: str, n_workers: int,
+                delta: float | Sequence[float] = 0,
+                n_chunks: int | None = None) -> Policy:
+    """The single policy factory shared by every backend (threads, in-process
+    replay, discrete-event simulator, JAX ring buffer)."""
+    if policy == "bsp":
+        return BSPPolicy(n_workers, n_chunks)
+    if policy == "dc":
+        if isinstance(delta, (int, float)) and delta == 0:
+            return BitVectorPolicy(n_workers, n_chunks)
+        return DeltaPolicy(n_workers, delta, n_chunks)
+    if policy == "dc-array":  # Sec-7.1 engine even at delta=0
+        return DeltaPolicy(n_workers, delta, n_chunks)
+    if policy == "hogwild":
+        return DeltaPolicy(n_workers, math.inf, n_chunks)
+    if policy == "ssp":
+        return SSPPolicy(n_workers, delta, n_chunks)
+    raise ValueError(f"unknown policy {policy!r}")
+
+
+def random_schedule(policy: str, n_workers: int, n_iters: int,
+                    seed: int = 0, delta: float = 0) -> list:
+    """Generate a random admissible execution history: at every step pick a
+    uniformly random worker whose next Def-3 operation is admissible under
+    the policy.  Used by the hypothesis property tests (every RC/WC history
+    must be sequentially correct — Theorems 1/2), by the SSP clock-bound
+    property test, and as a fuzzer for the admission engines (total progress
+    = deadlock freedom).
+
+    Implemented as the in-process ParameterDB backend driven with dummy
+    values — one admissible-move driver (``run_interleaved``) serves both
+    the fuzzer and the value-carrying conformance runs."""
+    import numpy as np
+
+    from .db import InProcessParameterDB, run_interleaved
+
+    zero = np.zeros(1)
+    db = InProcessParameterDB(
+        [zero] * n_workers, n_workers,
+        policy=make_policy(policy, n_workers, delta), record=True)
+    run_interleaved(db, n_iters, lambda worker, snap, itr: zero, seed=seed)
+    return db.history
+
+
+def ssp_clock_bound_violations(history, n_workers: int, slack: float) -> list:
+    """Replay a history against per-worker clocks and return every read that
+    observed a clock gap larger than ``slack`` — empty iff the history
+    respects the SSP bound."""
+    from ..core.history import READ, WRITE
+
+    clock = [0] * n_workers
+    bad = []
+    for op in history:
+        if op.kind == READ:
+            if (op.itr - 1) - min(clock) > slack:
+                bad.append(op)
+        elif op.kind == WRITE:
+            clock[op.worker] = max(clock[op.worker], op.itr)
+    return bad

@@ -45,12 +45,17 @@ def run_with_recovery(step_fn: Callable[[Any, Any], tuple[Any, dict]],
                       state: Any, batch: Any, step: int,
                       policy: RetryPolicy,
                       injector: FailureInjector | None = None,
-                      is_finite: Callable[[dict], bool] | None = None
+                      is_finite: Callable[[dict], bool] | None = None,
+                      telemetry: Any | None = None
                       ) -> tuple[Any, dict, str]:
     """Execute one training step with recovery.  Returns
     (state, metrics, outcome) where outcome is 'ok' | 'retried' | 'skipped'.
     On non-finite loss the state update is discarded (the prior state is
-    returned) — the safe default for poisoned batches."""
+    returned) — the safe default for poisoned batches.
+
+    ``telemetry`` is an optional :class:`repro.pdb.telemetry.Telemetry`;
+    retried and skipped steps are reported into it so one object summarizes
+    a run's synchronization *and* fault behavior."""
     attempts = 0
     while True:
         try:
@@ -60,6 +65,8 @@ def run_with_recovery(step_fn: Callable[[Any, Any], tuple[Any, dict]],
             if is_finite is not None and not is_finite(metrics):
                 if policy.skip_nonfinite:
                     log.warning("non-finite metrics at step %d; skipping", step)
+                    if telemetry is not None:
+                        telemetry.on_skip(step)
                     return state, metrics, "skipped"
                 raise FloatingPointError(f"non-finite loss at step {step}")
             return new_state, metrics, ("ok" if attempts == 0 else "retried")
@@ -71,4 +78,6 @@ def run_with_recovery(step_fn: Callable[[Any, Any], tuple[Any, dict]],
             attempts += 1
             if attempts > policy.max_retries:
                 raise
+            if telemetry is not None:
+                telemetry.on_retry(step)
             log.warning("step %d failed (attempt %d); retrying", step, attempts)

@@ -29,7 +29,7 @@ import jax
 import jax.numpy as jnp
 from repro.configs import get_smoke_config
 from repro.core.sync_jax import SyncConfig
-from repro.launch.costmodel import corrected_terms, group_body_cost
+from repro.launch.costmodel import corrected_terms, cost_dict, group_body_cost
 from repro.launch.dryrun import parse_collective_bytes
 from repro.launch.sharding import tree_shardings, batch_shardings
 from repro.models import paramlib
@@ -60,7 +60,7 @@ def grads_scan(params, batch):
 with mesh:
     compiled = jax.jit(grads_scan, in_shardings=(p_shard, b_shard)) \
         .lower(params_abs, batch_abs).compile()
-cost = compiled.cost_analysis()
+cost = cost_dict(compiled)
 flops_scan = float(cost.get("flops", 0))
 bytes_scan = float(cost.get("bytes accessed", 0))
 

@@ -2,7 +2,9 @@
 via hypothesis property testing over scheduler-generated executions."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import history as H
 from repro.core.scheduler import random_schedule

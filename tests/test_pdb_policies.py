@@ -1,0 +1,134 @@
+"""Policy-level coverage that the conformance matrix doesn't reach:
+the Hogwild (delta=inf) degenerate path, per-chunk delta arrays, and
+``SyncConfig.delay_for`` longest-prefix group-delay resolution."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.sync_jax import SyncConfig
+from repro.core import threaded as T
+from repro.pdb import DeltaPolicy, make_policy, random_schedule
+
+
+class _Key:
+    """Minimal stand-in for jax.tree_util.DictKey."""
+    def __init__(self, key):
+        self.key = key
+
+
+# ---------------------------------------------------------------------------
+# Hogwild: delta = inf
+# ---------------------------------------------------------------------------
+
+class TestHogwild:
+    def test_everything_admissible(self):
+        d = DeltaPolicy(3, delta=math.inf)
+        assert d.hogwild
+        for itr in (1, 7, 10 ** 9):
+            assert d.can_read(0, 1, itr)
+            assert d.can_write(2, 2, itr)
+
+    def test_make_policy_hogwild_alias(self):
+        d = make_policy("hogwild", 4)
+        assert isinstance(d, DeltaPolicy) and d.hogwild
+        # "dc" with delta=inf is the same engine
+        d2 = make_policy("dc", 4, delta=math.inf)
+        assert isinstance(d2, DeltaPolicy) and d2.hogwild
+
+    def test_random_schedule_total_progress(self):
+        """The fuzzer completes under full asynchrony (no admission gating
+        means no deadlock and maximal interleaving freedom)."""
+        for seed in range(5):
+            h = random_schedule("dc", 3, 4, seed=seed, delta=math.inf)
+            assert len(h) == 3 * 4 * 4
+
+    def test_hogwild_interleavings_reach_beyond_rcwc(self):
+        """With delta=inf some random schedule violates the exact RC/WC
+        constraints — the path is genuinely unsynchronized."""
+        from repro.core import history as H
+        found = False
+        for seed in range(20):
+            h = random_schedule("dc", 3, 3, seed=seed, delta=math.inf)
+            if not H.satisfies_rcwc(h, 3):
+                found = True
+                break
+        assert found
+
+    def test_threaded_hogwild_completes(self):
+        X, y = T.make_synthetic_lr(100, 18, seed=1)
+        task = T.LRTask(X, y, n_iters=6, mode="gd")
+        stats = T.run_parallel(task, 3, policy="hogwild",
+                               record_history=True)
+        from repro.core import history as H
+        assert H.is_complete(stats.history, 3, 6)
+        assert np.all(np.isfinite(stats.theta))
+
+
+# ---------------------------------------------------------------------------
+# Per-chunk delta arrays (Sec 7.1 heterogeneous delays)
+# ---------------------------------------------------------------------------
+
+class TestPerChunkDelta:
+    def test_per_chunk_read_gates(self):
+        d = DeltaPolicy(2, delta=[0, 2])
+        assert not d.can_read(0, 0, 2)   # chunk 0 exact: version 0 < 1
+        assert d.can_read(0, 1, 2)       # chunk 1 tolerates 2 behind
+        assert d.can_read(0, 1, 3)
+        assert not d.can_read(0, 1, 4)
+
+    def test_scalar_delta_property(self):
+        assert DeltaPolicy(2, delta=[1, 3]).delta == 3
+        assert DeltaPolicy(2, delta=2).delta == 2
+
+    def test_length_mismatch_rejected(self):
+        with pytest.raises(ValueError):
+            DeltaPolicy(2, delta=[0, 1], n_chunks=3)
+
+    def test_negative_rejected(self):
+        with pytest.raises(ValueError):
+            DeltaPolicy(2, delta=[0, -1])
+
+
+# ---------------------------------------------------------------------------
+# SyncConfig.delay_for: longest-prefix group-delay resolution
+# ---------------------------------------------------------------------------
+
+class TestDelayFor:
+    def test_default_uniform_delta(self):
+        s = SyncConfig(delta=3)
+        assert s.delay_for((_Key("blocks"), _Key("attn"))) == 3
+
+    def test_exact_prefix_match(self):
+        s = SyncConfig(delta=3, group_delays=(("embed", 0),))
+        assert s.delay_for((_Key("embed"),)) == 0
+        assert s.delay_for((_Key("head"),)) == 3
+
+    def test_longest_prefix_wins(self):
+        s = SyncConfig(delta=4, group_delays=(
+            ("blocks", 1), ("blocks/0", 2), ("blocks/0/attn", 3)))
+        assert s.delay_for((_Key("blocks"), _Key("0"), _Key("attn"))) == 3
+        assert s.delay_for((_Key("blocks"), _Key("0"), _Key("mlp"))) == 2
+        assert s.delay_for((_Key("blocks"), _Key("7"))) == 1
+        assert s.delay_for((_Key("embed"),)) == 4
+
+    def test_order_independent(self):
+        a = SyncConfig(delta=4, group_delays=(("b", 1), ("b/0", 2)))
+        b = SyncConfig(delta=4, group_delays=(("b/0", 2), ("b", 1)))
+        path = (_Key("b"), _Key("0"))
+        assert a.delay_for(path) == b.delay_for(path) == 2
+
+    def test_non_key_path_entries_stringify(self):
+        s = SyncConfig(delta=1, group_delays=(("layers/3", 0),))
+        class Idx:                      # e.g. a SequenceKey-like entry
+            def __str__(self):
+                return "3"
+        assert s.delay_for((_Key("layers"), Idx())) == 0
+
+    def test_to_policy_modes(self):
+        from repro.pdb import BSPPolicy, BitVectorPolicy, DeltaPolicy, SSPPolicy
+        assert isinstance(SyncConfig(mode="bsp").to_policy(4), BSPPolicy)
+        assert isinstance(SyncConfig().to_policy(4), BitVectorPolicy)
+        assert isinstance(SyncConfig(delta=2).to_policy(4), DeltaPolicy)
+        p = SyncConfig(mode="ssp", delta=2).to_policy(4)
+        assert isinstance(p, SSPPolicy) and p.slack == 2
