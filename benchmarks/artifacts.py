@@ -1,0 +1,42 @@
+"""Versioned benchmark artifacts: the repo's perf trajectory as data.
+
+Benchmarks emit ``BENCH_<topic>.json`` files checked into the repo — a
+list of ``{"name", "us_per_call", "derived", "commit"}`` entries — so
+every PR carries its own before/after numbers and CI can gate on
+regressions (benchmarks/regression_gate.py) instead of asserting wins in
+prose.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+KERNELS_JSON = os.path.join(REPO_ROOT, "benchmarks", "BENCH_kernels.json")
+PDB_JSON = os.path.join(REPO_ROOT, "benchmarks", "BENCH_pdb.json")
+
+
+def git_commit() -> str:
+    try:
+        return subprocess.check_output(
+            ["git", "rev-parse", "--short", "HEAD"], cwd=REPO_ROOT,
+            stderr=subprocess.DEVNULL).decode().strip()
+    except Exception:
+        return "unknown"
+
+
+def write_bench_json(path: str, rows: list[tuple[str, float, float]]) -> None:
+    """rows: (name, us_per_call, derived) -> schema'd JSON at ``path``."""
+    commit = git_commit()
+    entries = [{"name": name, "us_per_call": round(float(us), 3),
+                "derived": round(float(derived), 4), "commit": commit}
+               for name, us, derived in rows]
+    with open(path, "w") as f:
+        json.dump(entries, f, indent=1)
+        f.write("\n")
+
+
+def load_bench_json(path: str) -> list[dict]:
+    with open(path) as f:
+        return json.load(f)

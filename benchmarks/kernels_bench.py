@@ -1,0 +1,119 @@
+"""Micro-benchmarks for the serving/staleness hot path kernels.
+
+Covers the three Pallas fast-path targets and their XLA references:
+
+  * ``decode/attn_*``   — fused single-token GQA decode attention
+    (kernels/decode_attention.py) vs the einsum reference; derived =
+    effective KV-cache read bandwidth in GB/s (decode is memory bound).
+  * ``gather/ring_*``   — ParameterDB stale read: per-leaf dynamic-slice
+    chain (tree layout) vs one fused row-gather per parameter group
+    (packed layout, kernels/ring_gather.py); derived = speedup vs tree.
+  * ``moe/grouped_*``   — grouped-expert FFN (kernels/moe_matmul.py) vs
+    the one-hot EGCd dispatch einsums; derived = GFLOP/s.
+
+On CPU hosts only the XLA (``ref``) numbers are wall-clock meaningful —
+interpret mode is a Python emulator — so Pallas variants are benchmarked
+only when a TPU backend is attached.  Usage:
+
+  PYTHONPATH=src python -m benchmarks.run --quick --json
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def _time_us(fn, *args, repeats: int = 5, inner: int = 10) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)            # compile outside the clock
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for _ in range(inner):
+            out = fn(*args)
+        jax.block_until_ready(out)
+        best = min(best, (time.perf_counter() - t0) / inner)
+    return best * 1e6
+
+
+def _impls() -> list[str]:
+    impls = ["ref"]
+    if jax.default_backend() == "tpu":
+        impls.append("pallas")
+    return impls
+
+
+def bench_decode(quick: bool = False) -> list[tuple[str, float, float]]:
+    from repro.kernels import ops as kops
+    B, L, H, KV, hd = (4, 512, 8, 2, 64) if quick else (8, 2048, 16, 4, 64)
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, 1, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, L, KV, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, L, KV, hd), jnp.float32)
+    valid = jnp.ones((L,), bool)
+    cache_bytes = 2 * B * L * KV * hd * 4
+    rows = []
+    for impl in _impls():
+        fn = jax.jit(lambda q, k, v, m, _i=impl: kops.attention_decode(
+            q, k, v, m, impl=_i))
+        us = _time_us(fn, q, k, v, valid)
+        rows.append((f"decode/attn_{impl}", us, cache_bytes / us / 1e3))
+    return rows
+
+
+def bench_ring_gather(quick: bool = False) -> list[tuple[str, float, float]]:
+    from repro.pdb.jax_backend import init_delayed_state, make_delayed_step
+    n_leaves, leaf = (16, (64, 129)) if quick else (48, (128, 257))
+    delta = 3
+    params = {f"w{i}": jnp.full(leaf, float(i)) for i in range(n_leaves)}
+
+    def grad_fn(p, _):
+        return jnp.zeros(()), jax.tree.map(jnp.zeros_like, p)
+
+    def opt_update(g, s, p):
+        return p, s
+
+    rows, times = [], {}
+    for layout, packed in (("tree", False), ("packed", True)):
+        step = make_delayed_step(grad_fn, opt_update, delta, packed=packed)
+        state = init_delayed_state(params, lambda p: (), delta, packed=packed)
+        read = jax.jit(step.read_stale)
+        times[layout] = _time_us(read, state)
+    rows.append(("gather/ring_tree", times["tree"], 1.0))
+    rows.append(("gather/ring_packed", times["packed"],
+                 times["tree"] / max(times["packed"], 1e-9)))
+    return rows
+
+
+def bench_moe(quick: bool = False) -> list[tuple[str, float, float]]:
+    from repro.kernels import ops as kops
+    G, g, E, C, d, f = (1, 128, 4, 64, 128, 256) if quick \
+        else (2, 256, 8, 64, 256, 512)
+    ks = jax.random.split(jax.random.PRNGKey(1), 5)
+    probs = jax.nn.softmax(jax.random.normal(ks[0], (G, g, E)))
+    idx = jnp.argmax(probs, -1)
+    oh = jax.nn.one_hot(idx, E, dtype=jnp.float32)
+    pos = (jnp.cumsum(oh, axis=1) - oh).astype(jnp.int32)
+    keep = oh.astype(bool) & (pos < C)
+    slot = jax.nn.one_hot(jnp.where(keep, pos, C), C,
+                          dtype=jnp.float32) * keep[..., None]
+    dispatch = slot.astype(bool)
+    combine = slot * jnp.max(probs, -1)[..., None, None]
+    xg = jax.random.normal(ks[1], (G, g, d), jnp.float32)
+    wg = jax.random.normal(ks[2], (E, d, f), jnp.float32) * 0.05
+    wu = jax.random.normal(ks[3], (E, d, f), jnp.float32) * 0.05
+    wd = jax.random.normal(ks[4], (E, f, d), jnp.float32) * 0.05
+    flops = 2 * G * E * C * d * f * 3          # three expert matmuls
+    rows = []
+    for impl in _impls():
+        fn = jax.jit(lambda *a, _i=impl: kops.moe_grouped_ffn(*a, impl=_i))
+        us = _time_us(fn, dispatch, combine, xg, wg, wu, wd)
+        rows.append((f"moe/grouped_{impl}", us, flops / us / 1e3))
+    return rows
+
+
+def bench_rows(quick: bool = False) -> list[tuple[str, float, float]]:
+    return (bench_decode(quick) + bench_ring_gather(quick)
+            + bench_moe(quick))

@@ -14,6 +14,8 @@ Usage:
 
 Prints ``name,us_per_call,derived`` CSV rows like benchmarks/run.py:
 'us_per_call' is wall time per DB op, 'derived' the throughput metric.
+``--json`` also writes benchmarks/BENCH_pdb.json (the checked-in perf
+trajectory; see benchmarks/artifacts.py).
 """
 from __future__ import annotations
 
@@ -66,6 +68,8 @@ def bench_simulated(n_workers: int = 32, n_iters: int = 50
 
 
 def main() -> None:
+    from repro.launch.tuning import apply_tuning
+    apply_tuning()
     quick = "--quick" in sys.argv
     print("name,us_per_call,derived")
     t_rows = bench_threaded(n_iters=20 if quick else 60,
@@ -75,6 +79,10 @@ def main() -> None:
     s_rows = bench_simulated(n_iters=20 if quick else 50)
     for name, ms, thru in s_rows:
         print(f"{name},{ms:.2f},{thru:.2f}")
+    if "--json" in sys.argv:
+        from . import artifacts
+        artifacts.write_bench_json(artifacts.PDB_JSON, t_rows + s_rows)
+        print(f"# wrote {artifacts.PDB_JSON}", file=sys.stderr)
 
     by = {n: d for n, _, d in t_rows + s_rows}
     dc, bsp = by["threaded/dc"], by["threaded/bsp"]

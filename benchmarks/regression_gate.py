@@ -1,0 +1,76 @@
+"""Tier-2 perf regression gate: re-run the cheap benchmark subset and
+fail on >2x slowdown against the checked-in BENCH_*.json trajectory.
+
+Only ``us_per_call`` is compared, only for names present in both the
+baseline artifact and the fresh quick run, and only above a noise floor —
+figure/simulator rows (whose 'us_per_call' is harness wall time) are not
+re-measured here.  Skips cleanly when no baseline exists, so the gate can
+land before the first artifacts do.
+
+  PYTHONPATH=src python -m benchmarks.regression_gate
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+SLOWDOWN_LIMIT = 2.0
+NOISE_FLOOR_US = 20.0     # don't gate on sub-20us timings (pure jitter)
+
+
+def compare(baseline: list[dict], fresh: dict[str, float],
+            limit: float = SLOWDOWN_LIMIT,
+            floor: float = NOISE_FLOOR_US) -> tuple[list[str], list[str]]:
+    """Returns (failures, checked) comparing fresh us/call to baseline."""
+    failures, checked = [], []
+    for entry in baseline:
+        name, base_us = entry["name"], float(entry["us_per_call"])
+        if name not in fresh or base_us < floor:
+            continue
+        checked.append(name)
+        now = fresh[name]
+        if now > limit * base_us:
+            failures.append(f"{name}: {now:.1f}us vs baseline "
+                            f"{base_us:.1f}us ({now / base_us:.2f}x, "
+                            f"commit {entry.get('commit', '?')})")
+    return failures, checked
+
+
+def main() -> int:
+    from . import artifacts
+
+    suites = []
+    if os.path.exists(artifacts.KERNELS_JSON):
+        from . import kernels_bench
+        suites.append(("kernels", artifacts.KERNELS_JSON,
+                       lambda: kernels_bench.bench_rows(quick=True)))
+    else:
+        print(f"# no baseline {artifacts.KERNELS_JSON}; skipping",
+              file=sys.stderr)
+    if os.path.exists(artifacts.PDB_JSON):
+        from . import pdb_throughput
+        suites.append(("pdb", artifacts.PDB_JSON,
+                       lambda: pdb_throughput.bench_threaded(
+                           n_iters=20, repeats=2)))
+    else:
+        print(f"# no baseline {artifacts.PDB_JSON}; skipping",
+              file=sys.stderr)
+    if not suites:
+        print("regression gate: no baselines checked in — nothing to do")
+        return 0
+
+    all_failures = []
+    for topic, path, run in suites:
+        baseline = artifacts.load_bench_json(path)
+        fresh = {name: float(us) for name, us, _ in run()}
+        failures, checked = compare(baseline, fresh)
+        print(f"{topic}: checked {len(checked)} entries, "
+              f"{len(failures)} regression(s)")
+        all_failures += failures
+    for f in all_failures:
+        print(f"REGRESSION {f}", file=sys.stderr)
+    return 1 if all_failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,8 +1,16 @@
-"""Benchmark harness entry point: one function per paper table/figure plus
-the roofline summary.  Prints ``name,us_per_call,derived`` CSV rows — for
-figure benchmarks 'us_per_call' is the benchmark's own wall time and
-'derived' the reproduced metric (improvement % / speedup / roofline
-fraction)."""
+"""Benchmark harness entry point: one function per paper table/figure,
+kernel micro-benchmarks, plus the roofline summary.
+
+stdout is machine-parseable ``name,us_per_call,derived`` CSV only — all
+diagnostics go to stderr as ``#`` comments.  For figure benchmarks
+'us_per_call' is the benchmark's own wall time and 'derived' the
+reproduced metric (improvement % / speedup / roofline fraction); kernel
+rows are real per-call timings (see benchmarks/kernels_bench.py).
+
+``--json`` additionally writes the kernel rows to
+benchmarks/BENCH_kernels.json — the checked-in perf trajectory gated by
+benchmarks/regression_gate.py.
+"""
 from __future__ import annotations
 
 import sys
@@ -10,9 +18,13 @@ import time
 
 
 def main() -> None:
-    from . import figures, roofline
+    from repro.launch.tuning import apply_tuning
+    apply_tuning()
+
+    from . import artifacts, figures, kernels_bench, roofline
 
     quick = "--quick" in sys.argv
+    write_json = "--json" in sys.argv
     print("name,us_per_call,derived")
     figs = figures.ALL_FIGS
     if quick:
@@ -24,13 +36,20 @@ def main() -> None:
         for group, label, value in rows:
             print(f"{group}/{label},{dt_us:.1f},{value:.4f}")
 
+    kernel_rows = kernels_bench.bench_rows(quick=quick)
+    for name, us, derived in kernel_rows:
+        print(f"{name},{us:.2f},{derived:.4f}")
+    if write_json:
+        artifacts.write_bench_json(artifacts.KERNELS_JSON, kernel_rows)
+        print(f"# wrote {artifacts.KERNELS_JSON}", file=sys.stderr)
+
     # roofline fractions from the dry-run artifacts (if present)
     try:
         rows = roofline.bench_rows()
         for group, label, value in rows:
             print(f"{group}/{label},0.0,{value:.4f}")
         if not rows:
-            print("roofline/none,0.0,0.0  # run repro.launch.dryrun first",
+            print("# roofline: no artifacts; run repro.launch.dryrun first",
                   file=sys.stderr)
     except Exception as e:  # artifacts missing: benchmarks still usable
         print(f"# roofline skipped: {e}", file=sys.stderr)

@@ -3,14 +3,20 @@ KV/recurrent cache per sequence — including an attention-free arch where
 the state is O(1) in context length.
 
     PYTHONPATH=src python examples/serve_batched.py --arch rwkv6-1.6b
+
+The decode loop runs through the kernel dispatch layer: pass
+``--kernel-impl pallas`` on TPU for the fused decode-attention / grouped
+MoE fast path (``interpret`` emulates it on CPU for parity checks).
 """
 import argparse
+import os
 import time
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs import get_smoke_config
+from repro.launch.tuning import apply_tuning
 from repro.models import paramlib
 from repro.models.transformer import decode_step, model_specs, prefill
 
@@ -21,7 +27,12 @@ def main():
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=48)
     ap.add_argument("--gen", type=int, default=24)
+    ap.add_argument("--kernel-impl", choices=["ref", "pallas", "interpret"],
+                    default=None, help="kernel dispatch (REPRO_KERNEL_IMPL)")
     args = ap.parse_args()
+    if args.kernel_impl:
+        os.environ["REPRO_KERNEL_IMPL"] = args.kernel_impl
+    apply_tuning()
 
     cfg = get_smoke_config(args.arch)
     params = paramlib.init_tree(model_specs(cfg), jax.random.PRNGKey(0))

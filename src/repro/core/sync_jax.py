@@ -71,6 +71,9 @@ class SyncConfig:
     remat: str = "full"              # "none" | "full" | "dots"
     # per-partition-group delays (Sec 7.1 per-chunk version arrays):
     group_delays: tuple[tuple[str, int], ...] = ()
+    # ring-buffer layout: True/False force the packed (grouped, fused-gather)
+    # layout; None follows REPRO_KERNEL_IMPL (pdb/jax_backend.py)
+    packed_ring: bool | None = None
 
     def __post_init__(self):
         if self.mode not in (BSP, DATACENTRIC, SSP):

@@ -1,0 +1,93 @@
+"""Pallas grouped MoE FFN: per-expert block contraction, no EGCd tensor.
+
+The XLA reference (kernels/ref.py:moe_grouped_ffn) materializes the
+dispatched activations ``xin = einsum("GgEC,Ggd->EGCd", dispatch, x)`` —
+an (E, G, C, d) tensor written to and re-read from HBM three times (gate,
+up, down projections) plus the combine einsum.  This kernel fuses the
+whole expert computation per (token-group, expert) grid step:
+
+    xin_e = dispatch_e^T @ x_G          (C, d)   -- one-hot gather-as-matmul
+    y_e   = (silu(xin_e @ wg_e) * (xin_e @ wu_e)) @ wd_e
+    out_G += combine_e @ y_e            (g, d)   -- accumulated in VMEM
+
+so dispatched activations and per-expert outputs never leave VMEM.  The
+expert axis is minor-most in the grid; the (g, d) output accumulator
+lives in f32 scratch across experts and is written once.
+
+Weights stream per expert via the BlockSpec index maps — each expert's
+(d, f)/(f, d) matrices must fit VMEM alongside the (C, d)/(C, f)
+activations; block over f (future work) lifts that for the full-scale
+configs.  Sharding (expert-parallel layouts) stays on the XLA path; this
+kernel is the single-device fast path under shard_map.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _moe_kernel(dispT_ref, comb_ref, x_ref, wg_ref, wu_ref, wd_ref, o_ref,
+                acc_scr):
+    e = pl.program_id(1)
+    nE = pl.num_programs(1)
+
+    @pl.when(e == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    dispT = dispT_ref[0, 0].astype(jnp.float32)        # (C, g)
+    x = x_ref[0].astype(jnp.float32)                   # (g, d)
+    wg = wg_ref[0].astype(jnp.float32)                 # (d, f)
+    wu = wu_ref[0].astype(jnp.float32)
+    wd = wd_ref[0].astype(jnp.float32)                 # (f, d)
+
+    mm = functools.partial(jax.lax.dot_general,
+                           dimension_numbers=(((1,), (0,)), ((), ())),
+                           preferred_element_type=jnp.float32)
+    xin = mm(dispT, x)                                 # (C, d)
+    h = jax.nn.silu(mm(xin, wg))                       # (C, f)
+    u = mm(xin, wu)
+    y = mm(h * u, wd)                                  # (C, d)
+    comb = comb_ref[0, 0].astype(jnp.float32)          # (g, C)
+    acc_scr[...] = acc_scr[...] + mm(comb, y)          # (g, d)
+
+    @pl.when(e == nE - 1)
+    def _finalize():
+        o_ref[0] = acc_scr[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def moe_grouped_ffn(dispatch: jnp.ndarray, combine: jnp.ndarray,
+                    xg: jnp.ndarray, wg: jnp.ndarray, wu: jnp.ndarray,
+                    wd: jnp.ndarray, interpret: bool = False) -> jnp.ndarray:
+    """dispatch: (G, g, E, C) bool; combine: (G, g, E, C) f32;
+    xg: (G, g, d); wg/wu: (E, d, f); wd: (E, f, d) -> (G, g, d) in xg.dtype.
+    """
+    G, g, E, C = dispatch.shape
+    d = xg.shape[-1]
+
+    dispT = dispatch.astype(xg.dtype).transpose(0, 2, 3, 1)   # (G, E, C, g)
+    comb = combine.transpose(0, 2, 1, 3)                      # (G, E, g, C)
+
+    grid = (G, E)
+    out = pl.pallas_call(
+        _moe_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, C, g), lambda gi, e: (gi, e, 0, 0)),
+            pl.BlockSpec((1, 1, g, C), lambda gi, e: (gi, e, 0, 0)),
+            pl.BlockSpec((1, g, d), lambda gi, e: (gi, 0, 0)),
+            pl.BlockSpec((1,) + wg.shape[1:], lambda gi, e: (e, 0, 0)),
+            pl.BlockSpec((1,) + wu.shape[1:], lambda gi, e: (e, 0, 0)),
+            pl.BlockSpec((1,) + wd.shape[1:], lambda gi, e: (e, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, g, d), lambda gi, e: (gi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((G, g, d), xg.dtype),
+        scratch_shapes=[pltpu.VMEM((g, d), jnp.float32)],
+        interpret=interpret,
+    )(dispT, comb, xg, wg, wu, wd)
+    return out

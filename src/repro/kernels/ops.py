@@ -51,9 +51,36 @@ def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
 
 
 def attention_decode(q, k, v, valid, impl: str | None = None):
-    # One-token decode is a memory-bound gather + tiny matvec; the XLA path
-    # is already roofline-optimal — no Pallas kernel is warranted.
-    return ref.attention_decode(q, k, v, valid)
+    impl = impl or kernel_impl()
+    if impl == "ref":
+        return ref.attention_decode(q, k, v, valid)
+    from .decode_attention import decode_attention
+    return decode_attention(q, k, v, valid, interpret=(impl == "interpret"))
+
+
+def ring_gather(hist, idx, impl: str | None = None):
+    """Gather one stacked version: hist[(size, N)], idx scalar -> (N,)."""
+    impl = impl or kernel_impl()
+    if impl == "ref":
+        return ref.ring_gather(hist, idx)
+    from .ring_gather import ring_gather as _rg
+    return _rg(hist, idx, interpret=(impl == "interpret"))
+
+
+def moe_grouped_ffn(dispatch, combine, xg, wg, wu, wd, ep=None,
+                    impl: str | None = None):
+    """Grouped-expert FFN over dispatched token groups (models/moe.py).
+
+    The ``ep`` sharding hook only applies on the XLA path — the Pallas
+    kernel never materializes the dispatched (E, G, C, d) intermediate it
+    would constrain.
+    """
+    impl = impl or kernel_impl()
+    if impl == "ref":
+        return ref.moe_grouped_ffn(dispatch, combine, xg, wg, wu, wd, ep=ep)
+    from .moe_matmul import moe_grouped_ffn as _moe
+    return _moe(dispatch, combine, xg, wg, wu, wd,
+                interpret=(impl == "interpret"))
 
 
 def rwkv6(r, k, v, w, u, impl: str | None = None):

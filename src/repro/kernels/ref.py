@@ -97,6 +97,30 @@ def attention_decode(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     return out.astype(q.dtype)
 
 
+def ring_gather(hist: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """hist: (size, ...) stacked versions; idx: scalar -> hist[idx]."""
+    return jax.lax.dynamic_index_in_dim(hist, jnp.asarray(idx, jnp.int32),
+                                        axis=0, keepdims=False)
+
+
+def moe_grouped_ffn(dispatch: jnp.ndarray, combine: jnp.ndarray,
+                    xg: jnp.ndarray, wg: jnp.ndarray, wu: jnp.ndarray,
+                    wd: jnp.ndarray, ep=None) -> jnp.ndarray:
+    """Dense one-hot MoE dispatch (GShard style), the XLA path.
+
+    dispatch: (G, g, E, C) bool; combine: (G, g, E, C) f32; xg: (G, g, d);
+    wg/wu: (E, d, f); wd: (E, f, d) -> (G, g, d).  ``ep`` optionally
+    constrains the dispatched intermediates' sharding (models/moe.py).
+    """
+    if ep is None:
+        ep = lambda t: t
+    xin = ep(jnp.einsum("GgEC,Ggd->EGCd", dispatch.astype(xg.dtype), xg))
+    h = jax.nn.silu(jnp.einsum("EGCd,Edf->EGCf", xin, wg))
+    u = jnp.einsum("EGCd,Edf->EGCf", xin, wu)
+    out_e = ep(jnp.einsum("EGCf,Efd->EGCd", h * u, wd))
+    return jnp.einsum("GgEC,EGCd->Ggd", combine.astype(xg.dtype), out_e)
+
+
 def rwkv6(r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
           w: jnp.ndarray, u: jnp.ndarray) -> jnp.ndarray:
     """RWKV-6 WKV recurrence (Finch, arXiv:2404.05892).

@@ -1,0 +1,60 @@
+"""Pallas gather-of-versions for the ParameterDB delta ring buffer.
+
+The JAX backend (pdb/jax_backend.py) keeps the last ``delta + 1``
+parameter versions stacked along a leading axis.  Reading the version at
+admissible delay ``d`` is one row-gather ``hist[(ptr - d) % size]`` —
+but done leaf-by-leaf (the historical path) it lowers to one
+dynamic-slice DMA per pytree leaf, dozens per step for the zoo models.
+
+Here the row index arrives through scalar prefetch
+(``PrefetchScalarGridSpec``), so it is known before the kernel body runs
+and the BlockSpec index map itself selects the ring row: the whole
+gather is pure DMA over lane-aligned tiles of one *packed* (size, N)
+buffer — one kernel launch per parameter group, regardless of how many
+leaves the group holds.
+
+The packed layout (leaves grouped by (delay, dtype), flattened and
+concatenated, N padded to the 128-lane tile) is built once at engine
+init by pdb/jax_backend.py; values round-trip bit-exactly.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gather_kernel(idx_ref, hist_ref, out_ref):
+    del idx_ref  # consumed by the BlockSpec index maps
+    out_ref[...] = hist_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def ring_gather(hist: jnp.ndarray, idx: jnp.ndarray, block: int = 1024,
+                interpret: bool = False) -> jnp.ndarray:
+    """hist: (size, N); idx: scalar int32 in [0, size) -> hist[idx] (N,).
+
+    N need not divide ``block``; Pallas clips the trailing tile.  For
+    peak DMA efficiency pack N to a multiple of 128 lanes (the jax
+    backend's packer does).
+    """
+    size, N = hist.shape
+    block = min(block, N)
+    idx = jnp.asarray(idx, jnp.int32).reshape(1)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(pl.cdiv(N, block),),
+        in_specs=[pl.BlockSpec((1, block), lambda i, idx_ref: (idx_ref[0], i))],
+        out_specs=pl.BlockSpec((1, block), lambda i, idx_ref: (0, i)),
+    )
+    out = pl.pallas_call(
+        _gather_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((1, N), hist.dtype),
+        interpret=interpret,
+    )(idx, hist)
+    return out[0]

@@ -4,6 +4,11 @@ Demonstrates the inference side of the framework: a batch of prompts is
 prefillied into per-sequence KV/recurrent caches, then tokens are decoded
 greedily step by step.
 
+The decode loop dispatches through the kernel layer (repro.kernels.ops):
+``--kernel-impl pallas`` runs the fused GQA decode-attention and grouped
+MoE kernels on TPU; ``interpret`` emulates them on CPU (slow — parity
+checks only); the default follows ``REPRO_KERNEL_IMPL`` (XLA reference).
+
 Example:
   PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b --smoke \
       --batch 4 --prompt-len 32 --gen 16
@@ -11,6 +16,7 @@ Example:
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import jax
@@ -19,6 +25,7 @@ import jax.numpy as jnp
 from ..configs import get_config, get_smoke_config
 from ..models import paramlib
 from ..models.transformer import model_specs, prefill, decode_step
+from .tuning import apply_tuning
 
 
 def main(argv=None) -> dict:
@@ -29,7 +36,12 @@ def main(argv=None) -> dict:
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--kernel-impl", choices=["ref", "pallas", "interpret"],
+                    default=None, help="kernel dispatch (REPRO_KERNEL_IMPL)")
     args = ap.parse_args(argv)
+    if args.kernel_impl:
+        os.environ["REPRO_KERNEL_IMPL"] = args.kernel_impl
+    apply_tuning()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     params = paramlib.init_tree(model_specs(cfg), jax.random.PRNGKey(0),

@@ -33,6 +33,7 @@ from ..optim import OptConfig, make_optimizer
 from ..runtime.fault import FailureInjector, InjectedFailure, RetryPolicy, \
     run_with_recovery
 from .steps import make_train_engine
+from .tuning import apply_tuning
 
 
 def build(args):
@@ -74,6 +75,7 @@ def main(argv=None) -> dict:
                     help="inject a crash (restart drill)")
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args(argv)
+    apply_tuning()
 
     cfg, params, opt, sync, spec = build(args)
     start = 0

@@ -1,0 +1,68 @@
+"""XLA / platform tuning knobs, applied in one place (SNIPPETS.md §3).
+
+Benchmarks and the training driver call :func:`apply_tuning` first thing,
+so every number in BENCH_*.json reflects the same tuned baseline:
+
+  * async collectives + latency-hiding scheduler (GPU; the TPU scheduler
+    flag where supported) — overlaps the ParameterDB all-gathers /
+    reduce-scatters with compute, which is the whole point of the
+    data-centric sharded layout;
+  * ``--xla_force_host_platform_device_count=N`` — multi-device SPMD on a
+    CPU host (the dry-run / CI environment);
+  * optional f64 switch for numerics experiments.
+
+XLA reads these from the environment at backend init, so tuning must run
+before the first device computation; flags are appended idempotently and
+``REPRO_TUNE=0`` disables everything (untuned A/B baseline).
+"""
+from __future__ import annotations
+
+import os
+
+GPU_FLAGS = (
+    "--xla_gpu_enable_triton_softmax_fusion=true",
+    "--xla_gpu_triton_gemm_any=True",
+    "--xla_gpu_enable_async_collectives=true",
+    "--xla_gpu_enable_latency_hiding_scheduler=true",
+    "--xla_gpu_enable_highest_priority_async_stream=true",
+)
+TPU_FLAGS = (
+    "--xla_tpu_enable_latency_hiding_scheduler=true",
+)
+
+
+def apply_tuning(platform: str | None = None,
+                 host_device_count: int | None = None,
+                 enable_x64: bool = False) -> list[str]:
+    """Append tuning flags to XLA_FLAGS; returns the flags added.
+
+    platform: "cpu" | "gpu" | "tpu" | None (autodetect from JAX_PLATFORMS,
+    default cpu).  Safe to call repeatedly — already-present flags are
+    skipped.  No-op when REPRO_TUNE=0.
+    """
+    if os.environ.get("REPRO_TUNE", "1") == "0":
+        return []
+    platform = platform or os.environ.get("JAX_PLATFORMS", "cpu").split(",")[0]
+
+    flags: list[str] = []
+    if platform == "gpu":
+        flags += GPU_FLAGS
+    elif platform == "tpu":
+        flags += TPU_FLAGS
+    if host_device_count is not None:
+        try:
+            n_cores = os.cpu_count() or 1
+        except Exception:  # pragma: no cover
+            n_cores = 1
+        n = min(int(host_device_count), max(n_cores, 1))
+        flags.append(f"--xla_force_host_platform_device_count={n}")
+
+    current = os.environ.get("XLA_FLAGS", "")
+    added = [f for f in flags
+             if f.split("=")[0] not in current]
+    if added:
+        os.environ["XLA_FLAGS"] = (current + " " + " ".join(added)).strip()
+    if enable_x64:
+        import jax
+        jax.config.update("jax_enable_x64", True)
+    return added

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 
 from .config import ModelConfig
 from .paramlib import P
+from ..kernels import ops as kops
 
 
 def moe_specs(cfg: ModelConfig, stack: tuple[int, ...] = ()) -> dict:
@@ -101,13 +102,10 @@ def moe_ffn(params: dict, x: jnp.ndarray,
             return jax.lax.with_sharding_constraint(t, spec)
         return t
 
-    xin = _ep(jnp.einsum("GgEC,Ggd->EGCd", dispatch.astype(xg.dtype), xg))
-    h = jax.nn.silu(jnp.einsum("EGCd,Edf->EGCf", xin,
-                               params["wg"].astype(xg.dtype)))
-    u = jnp.einsum("EGCd,Edf->EGCf", xin, params["wu"].astype(xg.dtype))
-    out_e = _ep(jnp.einsum("EGCf,Efd->EGCd", h * u,
-                           params["wd"].astype(xg.dtype)))
-    out = jnp.einsum("GgEC,EGCd->Ggd", combine.astype(xg.dtype), out_e)
+    out = kops.moe_grouped_ffn(dispatch, combine, xg,
+                               params["wg"].astype(xg.dtype),
+                               params["wu"].astype(xg.dtype),
+                               params["wd"].astype(xg.dtype), ep=_ep)
 
     # Switch-style aux losses
     me = jnp.mean(probs, axis=(0, 1))                        # avg router prob

@@ -24,11 +24,13 @@ every group), validated against a :class:`repro.pdb.policies.DeltaPolicy`.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from ..kernels import ops as kops
 from .telemetry import Telemetry
 
 PyTree = Any
@@ -57,12 +59,98 @@ jax.tree_util.register_pytree_node(
     lambda aux, ch: DelayedState.tree_unflatten(aux, ch))
 
 
+# ---------------------------------------------------------------------------
+# Packed ring layout (the Pallas fast path)
+#
+# Leaves are grouped by (admissible delay, dtype), flattened and concatenated
+# into one (size, N) buffer per group, N padded to the 128-lane tile.  A
+# stale read is then ONE row-gather per group (kernels/ring_gather.py, row
+# index via scalar prefetch) instead of one dynamic-slice DMA per leaf; a
+# write is one row update per group.  Packing round-trips bit-exactly, so
+# the delta=0 sequential-correctness guarantee is untouched (asserted in
+# tests/test_staleness_jax.py).
+# ---------------------------------------------------------------------------
+
+_LANE = 128
+
+
+class _PackGroup(NamedTuple):
+    key: str                              # "d<delay>_<dtype>"
+    delay: int
+    dtype: Any
+    idxs: tuple[int, ...]                 # flat-leaf indices in this group
+    shapes: tuple[tuple[int, ...], ...]
+    sizes: tuple[int, ...]
+    pad: int                              # zero-pad to the lane tile
+
+
+def _pack_plan(params: PyTree, delta: int,
+               delay_for: Callable[[tuple], int] | None
+               ) -> tuple[list[_PackGroup], Any, int]:
+    leaves = jax.tree_util.tree_leaves_with_path(params)
+    treedef = jax.tree_util.tree_structure(params)
+    by_key: dict[tuple, list] = {}
+    for i, (path, leaf) in enumerate(leaves):
+        d = delta if delay_for is None else min(delay_for(path), delta)
+        dt = jnp.asarray(leaf).dtype
+        by_key.setdefault((d, dt.name), []).append((i, tuple(leaf.shape), dt))
+    plan = []
+    for (d, dtname) in sorted(by_key):
+        members = by_key[(d, dtname)]
+        sizes = tuple(int(np.prod(s)) for _, s, _ in members)
+        plan.append(_PackGroup(
+            key=f"d{d}_{dtname}", delay=d, dtype=members[0][2],
+            idxs=tuple(m[0] for m in members),
+            shapes=tuple(m[1] for m in members),
+            sizes=sizes, pad=(-sum(sizes)) % _LANE))
+    return plan, treedef, len(leaves)
+
+
+def _pack_rows(plan: list[_PackGroup], leaves: list) -> dict:
+    rows = {}
+    for g in plan:
+        parts = [jnp.ravel(leaves[i]).astype(g.dtype) for i in g.idxs]
+        row = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+        if g.pad:
+            row = jnp.pad(row, (0, g.pad))
+        rows[g.key] = row
+    return rows
+
+
+def _unpack_rows(plan: list[_PackGroup], rows: dict, treedef: Any,
+                 n_leaves: int) -> PyTree:
+    out: list = [None] * n_leaves
+    for g in plan:
+        row, off = rows[g.key], 0
+        for i, shape, sz in zip(g.idxs, g.shapes, g.sizes):
+            out[i] = jax.lax.slice_in_dim(row, off, off + sz).reshape(shape)
+            off += sz
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _resolve_packed(packed: bool | None) -> bool:
+    """Default layout follows the kernel dispatch: the Pallas impls
+    (``REPRO_KERNEL_IMPL=pallas|interpret``) use the packed ring."""
+    return kops.kernel_impl() != "ref" if packed is None else packed
+
+
 def init_delayed_state(params: PyTree, opt_init: Callable[[PyTree], PyTree],
-                       delta: int) -> DelayedState:
+                       delta: int, packed: bool | None = None,
+                       delay_for: Callable[[tuple], int] | None = None
+                       ) -> DelayedState:
     """Ring buffer starts filled with theta[0] (the paper's convention that
-    reads clipped below iteration 1 see the initial values)."""
-    hist = jax.tree.map(
-        lambda x: jnp.broadcast_to(x[None], (delta + 1,) + x.shape), params)
+    reads clipped below iteration 1 see the initial values).  ``packed``
+    selects the grouped (size, N) layout (see module notes); it must match
+    the ``make_delayed_step`` that consumes the state."""
+    size = delta + 1
+    if _resolve_packed(packed):
+        plan, _, _ = _pack_plan(params, delta, delay_for)
+        rows = _pack_rows(plan, jax.tree_util.tree_leaves(params))
+        hist = {k: jnp.broadcast_to(r[None], (size,) + r.shape)
+                for k, r in rows.items()}
+    else:
+        hist = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (size,) + x.shape), params)
     return DelayedState(params=params, hist=hist,
                         ptr=jnp.zeros((), jnp.int32),
                         opt_state=opt_init(params),
@@ -74,16 +162,37 @@ def make_delayed_step(
     opt_update: Callable[[PyTree, PyTree, PyTree], tuple[PyTree, PyTree]],
     delta: int,
     delay_for: Callable[[tuple], int] | None = None,
+    packed: bool | None = None,
 ) -> Callable[[DelayedState, Any], tuple[DelayedState, dict]]:
     """Build a jit-able delayed-gradient step.
 
     grad_fn(params, batch) -> (loss, grads)
     opt_update(grads, opt_state, params) -> (new_params, new_opt_state)
     delay_for(path) -> per-leaf delay in [0, delta]; default: uniform delta.
+    packed: use the grouped ring layout + fused gather (default: follows
+        ``REPRO_KERNEL_IMPL``).  The returned step exposes its stale-read
+        as ``step.read_stale`` (parity tests / benchmarks).
     """
     size = delta + 1
+    use_packed = _resolve_packed(packed)
+    plan_cache: dict = {}
+
+    def _plan_for(params: PyTree):
+        # static, derived once — one engine, one tree structure
+        if "plan" not in plan_cache:
+            plan_cache["plan"] = _pack_plan(params, delta, delay_for)
+        return plan_cache["plan"]
 
     def read_stale(state: DelayedState) -> PyTree:
+        if use_packed:
+            # state.params mirrors the (unpacked) tree the plan needs
+            plan, treedef, n_leaves = _plan_for(state.params)
+            rows = {}
+            for g in plan:
+                idx = jnp.mod(state.ptr - g.delay, size)
+                rows[g.key] = kops.ring_gather(state.hist[g.key], idx)
+            return _unpack_rows(plan, rows, treedef, n_leaves)
+
         def pick(path, hist_leaf):
             d = delta if delay_for is None else min(delay_for(path), delta)
             idx = jnp.mod(state.ptr - d, size)
@@ -96,15 +205,24 @@ def make_delayed_step(
         loss, grads = grad_fn(stale_params, batch)
         new_params, new_opt = opt_update(grads, state.opt_state, state.params)
         new_ptr = jnp.mod(state.ptr + 1, size)
-        new_hist = jax.tree.map(
-            lambda h, p: jax.lax.dynamic_update_index_in_dim(
-                h, p.astype(h.dtype), new_ptr, axis=0),
-            state.hist, new_params)
+        if use_packed:
+            plan, _, _ = plan_cache["plan"]
+            new_rows = _pack_rows(plan, jax.tree_util.tree_leaves(new_params))
+            new_hist = {
+                g.key: jax.lax.dynamic_update_index_in_dim(
+                    state.hist[g.key], new_rows[g.key], new_ptr, axis=0)
+                for g in plan}
+        else:
+            new_hist = jax.tree.map(
+                lambda h, p: jax.lax.dynamic_update_index_in_dim(
+                    h, p.astype(h.dtype), new_ptr, axis=0),
+                state.hist, new_params)
         new_state = DelayedState(params=new_params, hist=new_hist,
                                  ptr=new_ptr, opt_state=new_opt,
                                  step=state.step + 1)
         return new_state, {"loss": loss, "staleness": jnp.asarray(delta)}
 
+    step.read_stale = read_stale
     return step
 
 
@@ -191,8 +309,12 @@ def make_engine(params: PyTree,
             telemetry=telemetry, delta=0, group_delays=delays)
 
     delay_for = sync.delay_for if group_delays_cfg else None
-    raw = make_delayed_step(grad_fn, opt.update, delta, delay_for)
+    packed = _resolve_packed(getattr(sync, "packed_ring", None))
+    raw = make_delayed_step(grad_fn, opt.update, delta, delay_for,
+                            packed=packed)
     return TrainEngine(
-        init_state=lambda: init_delayed_state(params, opt.init, delta),
+        init_state=lambda: init_delayed_state(params, opt.init, delta,
+                                              packed=packed,
+                                              delay_for=delay_for),
         step_fn=jax.jit(raw),
         telemetry=telemetry, delta=delta, group_delays=delays)

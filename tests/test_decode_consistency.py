@@ -1,5 +1,10 @@
 """Serving-path integration: prefill + teacher-forced decode must equal the
-full forward pass exactly (f32, ample MoE capacity), for every arch."""
+full forward pass exactly (f32, ample MoE capacity), for every arch — and
+for every kernel impl: the XLA reference and the Pallas kernels in
+interpret mode (fused decode attention + grouped MoE) must give the same
+serving-path answer.  Interpret mode is a Python emulator, so the Pallas
+sweep is restricted to the two GQA configs the fused decode kernel is
+built for (llama3.2: 32q/8kv family; mixtral: GQA + MoE + SWA ring)."""
 import dataclasses
 
 import jax
@@ -11,13 +16,18 @@ from repro.models import paramlib
 from repro.models.transformer import (decode_step, forward, model_specs,
                                       prefill)
 
+PALLAS_ARCHS = ("llama3.2-1b", "mixtral-8x7b")
 
-@pytest.mark.parametrize("arch", all_arch_ids())
-def test_prefill_decode_matches_forward(arch):
+IMPL_CASES = [("ref", a) for a in all_arch_ids()] + \
+             [("interpret", a) for a in PALLAS_ARCHS]
+
+
+def _roundtrip(arch, B=2, S=24, extra=3, window=None):
     cfg = dataclasses.replace(get_smoke_config(arch), dtype=jnp.float32,
                               capacity_factor=4.0)
+    if window is not None:
+        cfg = dataclasses.replace(cfg, window=window)
     params = paramlib.init_tree(model_specs(cfg), jax.random.PRNGKey(0))
-    B, S, extra = 2, 24, 3
     toks = jax.random.randint(jax.random.PRNGKey(7), (B, S + extra), 0,
                               cfg.vocab_size)
     media = None
@@ -38,9 +48,17 @@ def test_prefill_decode_matches_forward(arch):
         assert err < 2e-3, (arch, t, err)
 
 
-def test_windowed_ring_buffer_wraps():
+@pytest.mark.parametrize("impl,arch", IMPL_CASES)
+def test_prefill_decode_matches_forward(impl, arch, monkeypatch):
+    monkeypatch.setenv("REPRO_KERNEL_IMPL", impl)
+    _roundtrip(arch)
+
+
+@pytest.mark.parametrize("impl", ["ref", "interpret"])
+def test_windowed_ring_buffer_wraps(impl, monkeypatch):
     """Decode far past the window: ring buffer must keep exactly the last
     `window` positions (gemma3 local layers)."""
+    monkeypatch.setenv("REPRO_KERNEL_IMPL", impl)
     cfg = dataclasses.replace(get_smoke_config("gemma3-4b"),
                               dtype=jnp.float32, window=8)
     params = paramlib.init_tree(model_specs(cfg), jax.random.PRNGKey(0))
@@ -54,3 +72,14 @@ def test_windowed_ring_buffer_wraps():
                                 jnp.asarray(S + t, jnp.int32), cfg)
         err = float(jnp.abs(dl[:, 0] - full_logits[:, S + t]).max())
         assert err < 2e-3, (t, err)
+
+
+@pytest.mark.parametrize("impl", ["ref", "interpret"])
+def test_gqa_ring_wrap_past_cache(impl, monkeypatch):
+    """mixtral smoke: SWA ring of length `window`=16, decoded to positions
+    pos >= cache ring length, under both kernel impls — the fused decode
+    kernel sees wrapped slots (slot = pos % L) with the window mask."""
+    monkeypatch.setenv("REPRO_KERNEL_IMPL", impl)
+    # prompt 16 + 6 generated: decode positions 16..21 all wrap the L=16
+    # swa ring (pos >= cache_len for the windowed cache)
+    _roundtrip("mixtral-8x7b", B=1, S=16, extra=6)

@@ -88,6 +88,88 @@ def test_delta_converges_on_convex():
     assert float(m["loss"]) < 0.2 * first
 
 
+def _mixed_tree(seed=11):
+    """A pytree with several leaves of different shapes/dtypes and a grad_fn
+    over all of them — exercises the packed ring's (delay, dtype) grouping."""
+    key = jax.random.PRNGKey(seed)
+    A = jax.random.normal(key, (32, 8)) / np.sqrt(8)
+    y = A @ jax.random.normal(jax.random.PRNGKey(seed + 1), (8,))
+    params = {
+        "w": jnp.zeros((8,)),
+        "m": jnp.zeros((4, 8)),
+        "b": jnp.zeros((1,)),
+        "h": jnp.zeros((8,), jnp.bfloat16),
+    }
+
+    def grad_fn(p, batch_):
+        def loss(pp):
+            w = pp["w"] + pp["m"].mean(0) + pp["h"].astype(jnp.float32)
+            r = batch_["A"] @ w + pp["b"] - batch_["y"]
+            return 0.5 * jnp.mean(r * r)
+        l, g = jax.value_and_grad(loss)(p)
+        return l, g
+
+    return params, {"A": A, "y": y}, grad_fn
+
+
+def _run_trajectory(packed, delta, delay_for=None, steps=8, seed=11,
+                    opt_name="adamw"):
+    params, batch, grad_fn = _mixed_tree(seed)
+    opt = make_optimizer(OptConfig(name=opt_name, lr=0.1, grad_clip=0,
+                                   weight_decay=0.0))
+    step = jax.jit(make_delayed_step(grad_fn, opt.update, delta=delta,
+                                     delay_for=delay_for, packed=packed))
+    state = init_delayed_state(params, opt.init, delta=delta, packed=packed,
+                               delay_for=delay_for)
+    stale0 = step.read_stale(state)
+    for _ in range(steps):
+        state, m = step(state, batch)
+    return stale0, state.params, m
+
+
+@pytest.mark.parametrize("delta", [0, 1, 2, 3])
+def test_packed_ring_bit_identical_to_tree(delta):
+    """The packed (delay, dtype)-grouped ring buffer must reproduce the
+    per-leaf tree ring exactly — reads and full trajectories, every delta."""
+    s_tree, p_tree, _ = _run_trajectory(packed=False, delta=delta)
+    s_pack, p_pack, _ = _run_trajectory(packed=True, delta=delta)
+    for k in p_tree:
+        np.testing.assert_array_equal(np.asarray(s_tree[k]),
+                                      np.asarray(s_pack[k]), err_msg=k)
+        np.testing.assert_array_equal(np.asarray(p_tree[k]),
+                                      np.asarray(p_pack[k]), err_msg=k)
+
+
+def test_packed_ring_mixed_delays_bit_identical():
+    """Per-group delays (Sec 7.1) land leaves in different packed groups;
+    the layouts must still agree bit-for-bit."""
+    def delay_for(path):
+        name = path[0].key if hasattr(path[0], "key") else str(path[0])
+        return {"w": 0, "m": 2, "b": 1, "h": 3}[name]
+
+    s_tree, p_tree, _ = _run_trajectory(packed=False, delta=3,
+                                        delay_for=delay_for)
+    s_pack, p_pack, _ = _run_trajectory(packed=True, delta=3,
+                                        delay_for=delay_for)
+    for k in p_tree:
+        np.testing.assert_array_equal(np.asarray(s_tree[k]),
+                                      np.asarray(s_pack[k]), err_msg=k)
+        np.testing.assert_array_equal(np.asarray(p_tree[k]),
+                                      np.asarray(p_pack[k]), err_msg=k)
+
+
+def test_packed_ring_pallas_gather_matches_ref(monkeypatch):
+    """With REPRO_KERNEL_IMPL=interpret the packed read path runs the Pallas
+    ring-gather kernel (emulated) — must stay bit-identical to the XLA ref."""
+    monkeypatch.setenv("REPRO_KERNEL_IMPL", "ref")
+    _, p_ref, _ = _run_trajectory(packed=True, delta=2, steps=5)
+    monkeypatch.setenv("REPRO_KERNEL_IMPL", "interpret")
+    _, p_int, _ = _run_trajectory(packed=True, delta=2, steps=5)
+    for k in p_ref:
+        np.testing.assert_array_equal(np.asarray(p_ref[k]),
+                                      np.asarray(p_int[k]), err_msg=k)
+
+
 def test_per_group_delays():
     """Sec-7.1 per-chunk version arrays: different param groups can read
     different staleness levels."""
