@@ -15,6 +15,7 @@ import subprocess
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 KERNELS_JSON = os.path.join(REPO_ROOT, "benchmarks", "BENCH_kernels.json")
 PDB_JSON = os.path.join(REPO_ROOT, "benchmarks", "BENCH_pdb.json")
+SERVE_JSON = os.path.join(REPO_ROOT, "benchmarks", "BENCH_serve.json")
 
 
 def git_commit() -> str:

@@ -21,10 +21,22 @@ NOISE_FLOOR_US = 20.0     # don't gate on sub-20us timings (pure jitter)
 def compare(baseline: list[dict], fresh: dict[str, float],
             limit: float = SLOWDOWN_LIMIT,
             floor: float = NOISE_FLOOR_US) -> tuple[list[str], list[str]]:
-    """Returns (failures, checked) comparing fresh us/call to baseline."""
+    """Returns (failures, checked) comparing fresh us/call to baseline.
+
+    Malformed baseline entries and benchmarked names absent from the
+    baseline are loud failures, not skips or KeyErrors: a silently
+    ungated benchmark is how a regression ships."""
     failures, checked = [], []
+    base_names = set()
     for entry in baseline:
+        if not isinstance(entry, dict) or "name" not in entry \
+                or "us_per_call" not in entry:
+            failures.append(f"malformed baseline entry {entry!r} "
+                            "(needs 'name' and 'us_per_call'); "
+                            "regenerate the BENCH json")
+            continue
         name, base_us = entry["name"], float(entry["us_per_call"])
+        base_names.add(name)
         if name not in fresh or base_us < floor:
             continue
         checked.append(name)
@@ -33,6 +45,10 @@ def compare(baseline: list[dict], fresh: dict[str, float],
             failures.append(f"{name}: {now:.1f}us vs baseline "
                             f"{base_us:.1f}us ({now / base_us:.2f}x, "
                             f"commit {entry.get('commit', '?')})")
+    for name in sorted(set(fresh) - base_names):
+        failures.append(f"{name}: benchmarked but missing from the "
+                        "baseline artifact — rerun the bench with --json "
+                        "and check the BENCH file in")
     return failures, checked
 
 
@@ -54,6 +70,13 @@ def main() -> int:
                            n_iters=20, repeats=2)))
     else:
         print(f"# no baseline {artifacts.PDB_JSON}; skipping",
+              file=sys.stderr)
+    if os.path.exists(artifacts.SERVE_JSON):
+        from . import serve_bench
+        suites.append(("serve", artifacts.SERVE_JSON,
+                       lambda: serve_bench.bench_rows(smoke=True)))
+    else:
+        print(f"# no baseline {artifacts.SERVE_JSON}; skipping",
               file=sys.stderr)
     if not suites:
         print("regression gate: no baselines checked in — nothing to do")

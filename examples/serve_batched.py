@@ -1,76 +1,25 @@
-"""Batched serving example: prefill a batch of prompts, decode with one
-KV/recurrent cache per sequence — including an attention-free arch where
-the state is O(1) in context length.
+"""Static-batch serving example — the drain-the-batch baseline.
+
+One code path with the continuous-batching driver: this forwards to
+``repro.launch.serve`` with ``--static``, i.e. the same engine and paged
+cache with admission barriers turned back on (a new wave only starts once
+every slot has drained).  Compare against the default continuous mode to
+see the slot-utilization gap:
 
     PYTHONPATH=src python examples/serve_batched.py --arch rwkv6-1.6b
 
-The decode loop runs through the kernel dispatch layer: pass
-``--kernel-impl pallas`` on TPU for the fused decode-attention / grouped
-MoE fast path (``interpret`` emulates it on CPU for parity checks).
+All unrecognized flags pass straight through to the driver (e.g.
+``--rate``, ``--batch``, ``--kernel-impl pallas`` on TPU).
 """
-import argparse
-import os
-import time
+import sys
 
-import jax
-import jax.numpy as jnp
-
-from repro.configs import get_smoke_config
-from repro.launch.tuning import apply_tuning
-from repro.models import paramlib
-from repro.models.transformer import decode_step, model_specs, prefill
-
-
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="rwkv6-1.6b")
-    ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--prompt-len", type=int, default=48)
-    ap.add_argument("--gen", type=int, default=24)
-    ap.add_argument("--kernel-impl", choices=["ref", "pallas", "interpret"],
-                    default=None, help="kernel dispatch (REPRO_KERNEL_IMPL)")
-    args = ap.parse_args()
-    if args.kernel_impl:
-        os.environ["REPRO_KERNEL_IMPL"] = args.kernel_impl
-    apply_tuning()
-
-    cfg = get_smoke_config(args.arch)
-    params = paramlib.init_tree(model_specs(cfg), jax.random.PRNGKey(0))
-    B, S = args.batch, args.prompt_len
-    prompts = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
-                                 cfg.vocab_size)
-    media = None
-    if cfg.frontend == "vision":
-        media = jax.random.normal(
-            jax.random.PRNGKey(2),
-            (B, cfg.n_frontend_tokens, cfg.d_frontend), jnp.float32)
-
-    cache_len = S + args.gen
-    jit_prefill = jax.jit(lambda p, t: prefill(
-        p, t, cfg, cache_len=cache_len, media=media))
-    jit_decode = jax.jit(lambda p, c, t, pos: decode_step(
-        p, c, t, pos, cfg, media=media))
-
-    t0 = time.time()
-    logits, cache = jit_prefill(params, prompts)
-    jax.block_until_ready(logits)
-    print(f"prefill {B}x{S}: {(time.time()-t0)*1e3:.0f} ms")
-
-    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-    seqs = [tok]
-    t0 = time.time()
-    for i in range(args.gen - 1):
-        logits, cache = jit_decode(params, cache, tok,
-                                   jnp.asarray(S + i, jnp.int32))
-        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
-        seqs.append(tok)
-    jax.block_until_ready(tok)
-    dt = time.time() - t0
-    out = jnp.concatenate(seqs, axis=1)
-    print(f"decode: {B*(args.gen-1)/dt:.0f} tok/s "
-          f"({dt/(args.gen-1)*1e3:.1f} ms/step)")
-    print("first sequence:", out[0].tolist())
+from repro.launch.serve import main
 
 
 if __name__ == "__main__":
-    main()
+    argv = sys.argv[1:]
+    if "--arch" not in argv:
+        argv = ["--arch", "rwkv6-1.6b"] + argv
+    if "--smoke" not in argv:
+        argv.append("--smoke")
+    main(argv + ["--static"])

@@ -70,7 +70,9 @@ def _decode_kernel(q_ref, k_ref, v_ref, valid_ref, o_ref,
 def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                      valid: jnp.ndarray, block_k: int = 128,
                      interpret: bool = False) -> jnp.ndarray:
-    """q: (B, 1, H, hd); k, v: (B, L, KV, hd); valid: (L,) bool.
+    """q: (B, 1, H, hd); k, v: (B, L, KV, hd); valid: (L,) or (B, L) bool
+    (per-sequence masks — continuous batching decodes every sequence at
+    its own ring position).
 
     Returns (B, 1, H, hd) in q.dtype.  Matches ref.attention_decode.
     """
@@ -82,12 +84,14 @@ def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     block_k = min(block_k, L)
     L_pad = math.ceil(L / block_k) * block_k
     validp = jnp.asarray(valid, jnp.int32)
+    if validp.ndim == 1:
+        validp = validp[None]
     if L_pad != L:
         pad = ((0, 0), (0, L_pad - L), (0, 0), (0, 0))
         k = jnp.pad(k, pad)
         v = jnp.pad(v, pad)
-        validp = jnp.pad(validp, (0, L_pad - L))
-    validp = validp[None]                               # (1, L_pad)
+        validp = jnp.pad(validp, ((0, 0), (0, L_pad - L)))
+    validp = jnp.broadcast_to(validp, (B, L_pad))
 
     # q: (B, KV, group, hd); k/v: (B, KV, L_pad, hd)
     qt = q.reshape(B, KV, group, hd)
@@ -102,7 +106,7 @@ def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
             pl.BlockSpec((1, 1, group, hd), lambda b, h, ik: (b, h, 0, 0)),
             pl.BlockSpec((1, 1, block_k, hd), lambda b, h, ik: (b, h, ik, 0)),
             pl.BlockSpec((1, 1, block_k, hd), lambda b, h, ik: (b, h, ik, 0)),
-            pl.BlockSpec((1, block_k), lambda b, h, ik: (0, ik)),
+            pl.BlockSpec((1, block_k), lambda b, h, ik: (b, ik)),
         ],
         out_specs=pl.BlockSpec((1, 1, group, hd),
                                lambda b, h, ik: (b, h, 0, 0)),

@@ -67,6 +67,16 @@ def ring_gather(hist, idx, impl: str | None = None):
     return _rg(hist, idx, interpret=(impl == "interpret"))
 
 
+def page_gather(pool, page_table, impl: str | None = None):
+    """Paged-KV logical view: pool (P, page, ...) + page_table (B, n_pp)
+    -> (B, n_pp * page, ...) — the serving engine's cache materializer."""
+    impl = impl or kernel_impl()
+    if impl == "ref":
+        return ref.page_gather(pool, page_table)
+    from .page_gather import page_gather as _pg
+    return _pg(pool, page_table, interpret=(impl == "interpret"))
+
+
 def moe_grouped_ffn(dispatch, combine, xg, wg, wu, wd, ep=None,
                     impl: str | None = None):
     """Grouped-expert FFN over dispatched token groups (models/moe.py).

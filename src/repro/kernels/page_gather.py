@@ -1,0 +1,60 @@
+"""Pallas page-table gather for the paged serving KV cache.
+
+The serving engine (repro.serve) keeps each attention layer's KV cache as
+a pool of fixed-size pages shared by all sequence slots; a per-sequence
+page table maps logical cache pages to physical pool pages
+(vLLM-style paged attention, restricted to gather-before-attend).
+
+Materializing the logical (B, L, KV, hd) view is then a row-gather of
+``B * pages_per_seq`` pool rows.  Like kernels/ring_gather.py, the page
+ids arrive through scalar prefetch (``PrefetchScalarGridSpec``) so the
+BlockSpec index map itself selects the physical page: the gather is pure
+DMA over lane-aligned tiles, one grid step per (page, tile) — no
+compute, no scatter, regardless of how fragmented the page table is.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gather_kernel(pt_ref, pool_ref, out_ref):
+    del pt_ref  # consumed by the BlockSpec index maps
+    out_ref[...] = pool_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def page_gather(pool: jnp.ndarray, page_table: jnp.ndarray,
+                block: int = 1024, interpret: bool = False) -> jnp.ndarray:
+    """pool: (P, page, ...); page_table: (B, n_pp) int32 in [0, P).
+
+    Returns the logical view (B, n_pp * page, ...) in pool dtype, i.e.
+    ``pool[page_table]`` with the page axis folded into the cache axis.
+    """
+    P, page = pool.shape[0], pool.shape[1]
+    tail = pool.shape[2:]
+    B, n_pp = page_table.shape
+    row = page * math.prod(tail)
+    rows = pool.reshape(P, row)
+    idx = page_table.reshape(-1).astype(jnp.int32)        # (B * n_pp,)
+    block = min(block, row)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B * n_pp, pl.cdiv(row, block)),
+        in_specs=[pl.BlockSpec((1, block),
+                               lambda i, j, pt_ref: (pt_ref[i], j))],
+        out_specs=pl.BlockSpec((1, block), lambda i, j, pt_ref: (i, j)),
+    )
+    out = pl.pallas_call(
+        _gather_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B * n_pp, row), pool.dtype),
+        interpret=interpret,
+    )(idx, rows)
+    return out.reshape((B, n_pp * page) + tail)

@@ -84,14 +84,17 @@ def attention_chunked(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
 def attention_decode(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                      valid: jnp.ndarray) -> jnp.ndarray:
     """Single-token decode.  q: (B, 1, H, hd); k, v: (B, L, KV, hd);
-    valid: (L,) bool mask of live cache slots."""
+    valid: (L,) or per-sequence (B, L) bool mask of live cache slots
+    (continuous batching puts every sequence at its own position).  At
+    least one slot per sequence must be valid."""
     B, _, H, hd = q.shape
     k = _repeat_kv(k, H)
     v = _repeat_kv(v, H)
     scale = hd ** -0.5
     scores = jnp.einsum("bqhd,bkhd->bhqk", q, k,
                         preferred_element_type=jnp.float32) * scale
-    scores = jnp.where(valid[None, None, None, :], scores, -jnp.inf)
+    vmask = valid[None, :] if valid.ndim == 1 else valid        # (B, L)
+    scores = jnp.where(vmask[:, None, None, :], scores, -jnp.inf)
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v)
     return out.astype(q.dtype)
@@ -101,6 +104,14 @@ def ring_gather(hist: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
     """hist: (size, ...) stacked versions; idx: scalar -> hist[idx]."""
     return jax.lax.dynamic_index_in_dim(hist, jnp.asarray(idx, jnp.int32),
                                         axis=0, keepdims=False)
+
+
+def page_gather(pool: jnp.ndarray, page_table: jnp.ndarray) -> jnp.ndarray:
+    """pool: (P, page, ...); page_table: (B, n_pp) int32 ->
+    (B, n_pp * page, ...) — the paged KV cache's logical view."""
+    B, n_pp = page_table.shape
+    out = pool[page_table]                       # (B, n_pp, page, ...)
+    return out.reshape((B, n_pp * pool.shape[1]) + pool.shape[2:])
 
 
 def moe_grouped_ffn(dispatch: jnp.ndarray, combine: jnp.ndarray,

@@ -1,30 +1,33 @@
-"""Serving driver: batched prefill + decode loop on CPU (reduced configs).
+"""Serving driver: the continuous-batching engine on an open-loop workload.
 
-Demonstrates the inference side of the framework: a batch of prompts is
-prefillied into per-sequence KV/recurrent caches, then tokens are decoded
-greedily step by step.
+Thin CLI wrapper over :class:`repro.serve.ServeEngine`: prompts are
+prefilled into paged per-sequence KV/recurrent caches, then decoded
+greedily with sequences joining and leaving the batch mid-decode
+(``--static`` restores the drain-the-batch baseline — same engine, same
+cache, admission barrier only).  Arrivals follow a Poisson process at
+``--rate`` requests/second.
 
 The decode loop dispatches through the kernel layer (repro.kernels.ops):
-``--kernel-impl pallas`` runs the fused GQA decode-attention and grouped
-MoE kernels on TPU; ``interpret`` emulates them on CPU (slow — parity
-checks only); the default follows ``REPRO_KERNEL_IMPL`` (XLA reference).
+``--kernel-impl pallas`` runs the fused GQA decode-attention, paged
+gather and grouped MoE kernels on TPU; ``interpret`` emulates them on CPU
+(slow — parity checks only); the default follows ``REPRO_KERNEL_IMPL``
+(XLA reference).
 
 Example:
-  PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b --smoke \
-      --batch 4 --prompt-len 32 --gen 16
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
+      --requests 16 --rate 4 --batch 4
 """
 from __future__ import annotations
 
 import argparse
 import os
-import time
 
 import jax
-import jax.numpy as jnp
 
 from ..configs import get_config, get_smoke_config
 from ..models import paramlib
-from ..models.transformer import model_specs, prefill, decode_step
+from ..models.transformer import model_specs
+from ..serve import ServeConfig, ServeEngine, open_loop_requests
 from .tuning import apply_tuning
 
 
@@ -32,9 +35,22 @@ def main(argv=None) -> dict:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="sequence slots (B_max)")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--rate", type=float, default=4.0,
+                    help="Poisson arrival rate, requests/second")
+    ap.add_argument("--prompt-len", type=int, default=None,
+                    help="fix the prompt length (default: sample 8/16/32)")
+    ap.add_argument("--gen", type=int, default=None,
+                    help="fix the generation length (default: sample "
+                         "4/8/16/48)")
+    ap.add_argument("--static", action="store_true",
+                    help="drain-the-batch baseline (continuous off)")
+    ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--cache-len", type=int, default=None,
+                    help="logical KV ring length (default: fits the "
+                         "longest prompt+gen, page-aligned)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--kernel-impl", choices=["ref", "pallas", "interpret"],
                     default=None, help="kernel dispatch (REPRO_KERNEL_IMPL)")
@@ -46,37 +62,30 @@ def main(argv=None) -> dict:
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     params = paramlib.init_tree(model_specs(cfg), jax.random.PRNGKey(0),
                                 dtype=cfg.param_dtype)
-    key = jax.random.PRNGKey(args.seed)
-    B, S = args.batch, args.prompt_len
-    prompts = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
-    media = None
-    if cfg.frontend == "vision":
-        media = jax.random.normal(
-            key, (B, cfg.n_frontend_tokens, cfg.d_frontend), jnp.float32)
 
-    cache_len = S + args.gen
-    t0 = time.time()
-    jit_prefill = jax.jit(
-        lambda p, t: prefill(p, t, cfg, cache_len=cache_len, media=media))
-    logits, cache = jit_prefill(params, prompts)
-    t_prefill = time.time() - t0
+    prompt_lens = (args.prompt_len,) if args.prompt_len else (8, 16, 32)
+    gen_lens = (args.gen,) if args.gen else (4, 8, 16, 48)
+    requests = open_loop_requests(args.requests, args.rate, cfg.vocab_size,
+                                  prompt_lens=prompt_lens, gen_lens=gen_lens,
+                                  seed=args.seed)
+    page = args.page_size
+    need = max(prompt_lens) + max(gen_lens)
+    cache_len = args.cache_len or -(-need // page) * page
 
-    jit_decode = jax.jit(
-        lambda p, c, t, pos: decode_step(p, c, t, pos, cfg, media=media))
-    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-    generated = [tok]
-    t0 = time.time()
-    for i in range(args.gen - 1):
-        logits, cache = jit_decode(params, cache, tok,
-                                   jnp.asarray(S + i, jnp.int32))
-        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
-        generated.append(tok)
-    dt = time.time() - t0
-    out = jnp.concatenate(generated, axis=1)
-    toks_per_s = B * (args.gen - 1) / max(dt, 1e-9)
-    print(f"prefill: {t_prefill*1e3:.0f}ms; decode: {toks_per_s:.1f} tok/s")
-    print("generated:", out[:, :12].tolist())
-    return {"tokens": out, "tok_per_s": toks_per_s}
+    scfg = ServeConfig(batch_size=args.batch, page_size=page,
+                       cache_len=cache_len, continuous=not args.static)
+    report = ServeEngine(cfg, params, scfg).run(requests)
+
+    print(f"{report.mode}: {report.total_tokens} tokens / "
+          f"{report.n_requests} requests in {report.duration:.2f}s "
+          f"({report.tokens_per_sec:.1f} tok/s, "
+          f"slot utilization {report.utilization:.0%})")
+    print(f"latency p50 {report.latency_p50*1e3:.0f}ms "
+          f"p99 {report.latency_p99*1e3:.0f}ms over {report.decode_steps} "
+          f"decode steps")
+    first = report.outputs[min(report.outputs)]
+    print("first request:", list(first[:12]))
+    return {"report": report, "tok_per_s": report.tokens_per_sec}
 
 
 if __name__ == "__main__":

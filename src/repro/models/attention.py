@@ -116,33 +116,88 @@ def kv_cache_axes(kind: str, stack_dims: int = 0):
     return {"k": ax, "v": ax}
 
 
-def attention_decode(params: dict, x: jnp.ndarray, cache: dict,
-                     cfg: ModelConfig, kind: str,
-                     pos: jnp.ndarray) -> tuple[jnp.ndarray, dict]:
-    """One-token decode.  x: (B, 1, d); pos: scalar int32 (current position).
-    Returns (out (B,1,d), updated cache)."""
-    q, k_new, v_new = _qkv(params, x, cfg)
-    theta = _rope_theta(cfg, kind)
-    posv = pos[None] if pos.ndim == 0 else pos
-    q = apply_rope(q, jnp.broadcast_to(posv, (x.shape[0], 1)), theta)
-    k_new = apply_rope(k_new, jnp.broadcast_to(posv, (x.shape[0], 1)), theta)
-
-    L = cache["k"].shape[1]
-    slot = jnp.mod(pos, L)                      # ring buffer for windowed
-    k = _dyn_update(cache["k"], k_new, slot)
-    v = _dyn_update(cache["v"], v_new, slot)
-
-    # positions of cache entries (for masking): entry at index i holds
-    # absolute position p with p % L == i, p <= pos, p > pos - L.
+def _ring_valid(pos: jnp.ndarray, L: int, cfg: ModelConfig,
+                kind: str) -> jnp.ndarray:
+    """Live-slot mask of a ring cache: entry at index i holds absolute
+    position p with p % L == i, p <= pos, p > pos - L.  pos: scalar -> (L,);
+    pos: (B,) -> (B, L) per-sequence masks."""
     idx = jnp.arange(L)
+    if pos.ndim:
+        pos = pos[:, None]
     abs_pos = pos - jnp.mod(pos - idx, L)       # absolute position per slot
     valid = (abs_pos >= 0) & (abs_pos >= pos - (L - 1))
     if kind in ("local", "swa") and cfg.window:
         valid &= abs_pos > pos - cfg.window
+    return valid
 
+
+def attention_decode(params: dict, x: jnp.ndarray, cache: dict,
+                     cfg: ModelConfig, kind: str,
+                     pos: jnp.ndarray) -> tuple[jnp.ndarray, dict]:
+    """One-token decode.  x: (B, 1, d); pos: scalar int32, or (B,) int32
+    when every sequence sits at its own position (continuous batching).
+    Returns (out (B,1,d), updated cache)."""
+    q, k_new, v_new = _qkv(params, x, cfg)
+    theta = _rope_theta(cfg, kind)
+    B = x.shape[0]
+    posb = jnp.broadcast_to(pos[None], (B,)) if pos.ndim == 0 else pos
+    q = apply_rope(q, posb[:, None], theta)
+    k_new = apply_rope(k_new, posb[:, None], theta)
+
+    L = cache["k"].shape[1]
+    if pos.ndim == 0:
+        slot = jnp.mod(pos, L)                  # ring buffer for windowed
+        k = _dyn_update(cache["k"], k_new, slot)
+        v = _dyn_update(cache["v"], v_new, slot)
+    else:
+        slot = jnp.mod(posb, L)                 # (B,) per-sequence slots
+        b_idx = jnp.arange(B)
+        k = cache["k"].at[b_idx, slot].set(k_new[:, 0].astype(cache["k"].dtype))
+        v = cache["v"].at[b_idx, slot].set(v_new[:, 0].astype(cache["v"].dtype))
+
+    valid = _ring_valid(pos, L, cfg, kind)
     out = kops.attention_decode(q, k, v, valid)
     out = _merge_heads(out) @ params["wo"].astype(x.dtype)
     return out, {"k": k, "v": v}
+
+
+def attention_decode_paged(params: dict, x: jnp.ndarray, cache: dict,
+                           cfg: ModelConfig, kind: str,
+                           pos: jnp.ndarray) -> tuple[jnp.ndarray, dict]:
+    """One-token decode against a paged KV cache (repro.serve.paged_cache).
+
+    cache: {"pk", "pv": (P, page, KV, hd) page pools shared by all sequence
+    slots, "pt": (B, n_pp) int32 per-sequence page table}.  pos: (B,) int32
+    per-sequence positions (slots not serving a sequence should sit at
+    pos 0 — their page-table rows point at the reserved junk page, so the
+    write below never touches live pages).
+
+    The logical ring view (slot = pos % L, L = n_pp * page) is identical to
+    the dense cache's, so paged decode is exactly dense decode with the
+    cache rows indirected through the page table.
+    """
+    q, k_new, v_new = _qkv(params, x, cfg)
+    theta = _rope_theta(cfg, kind)
+    B = x.shape[0]
+    posb = jnp.broadcast_to(pos[None], (B,)) if pos.ndim == 0 else pos
+    q = apply_rope(q, posb[:, None], theta)
+    k_new = apply_rope(k_new, posb[:, None], theta)
+
+    pk, pv, pt = cache["pk"], cache["pv"], cache["pt"]
+    page = pk.shape[1]
+    L = pt.shape[1] * page
+    slot = jnp.mod(posb, L)                                   # (B,)
+    phys = jnp.take_along_axis(pt, (slot // page)[:, None], axis=1)[:, 0]
+    off = slot % page
+    pk = pk.at[phys, off].set(k_new[:, 0].astype(pk.dtype))
+    pv = pv.at[phys, off].set(v_new[:, 0].astype(pv.dtype))
+
+    k = kops.page_gather(pk, pt)                              # (B, L, KV, hd)
+    v = kops.page_gather(pv, pt)
+    valid = _ring_valid(posb, L, cfg, kind)
+    out = kops.attention_decode(q, k, v, valid)
+    out = _merge_heads(out) @ params["wo"].astype(x.dtype)
+    return out, {"pk": pk, "pv": pv, "pt": pt}
 
 
 def _dyn_update(buf: jnp.ndarray, new: jnp.ndarray,

@@ -336,7 +336,11 @@ def _decode_block(bp: dict, kind: str, x: jnp.ndarray, c: dict,
                   ctx: Ctx) -> tuple[jnp.ndarray, dict]:
     h = apply_norm(bp["ln1"], x, cfg)
     if kind in ("attn", "local", "swa"):
-        mix, c = attn.attention_decode(bp["mix"], h, c, cfg, kind, pos)
+        if "pk" in c:     # paged pool + page table (repro.serve)
+            mix, c = attn.attention_decode_paged(bp["mix"], h, c, cfg,
+                                                 kind, pos)
+        else:
+            mix, c = attn.attention_decode(bp["mix"], h, c, cfg, kind, pos)
     elif kind == "xattn":
         mix = attn.cross_attention_fwd(bp["mix"], h, ctx.media, cfg)
     elif kind == "rwkv6":
@@ -360,12 +364,16 @@ def decode_step(params: dict, cache: dict, tokens: jnp.ndarray,
                 media: jnp.ndarray | None = None,
                 act_specs: dict | None = None
                 ) -> tuple[jnp.ndarray, dict]:
-    """One decode step.  tokens: (B, 1); pos: scalar int32.
+    """One decode step.  tokens: (B, 1); pos: scalar int32, or (B,) int32
+    per-sequence positions (continuous batching: every sequence sits at
+    its own position; paged caches require the vector form).
     Returns (logits (B, 1, V) f32, updated cache)."""
     B = tokens.shape[0]
     x = embed_tokens(params, tokens, cfg)
     x = _wsc(x, act_specs, "act")
-    ctx = Ctx(positions=jnp.broadcast_to(pos[None, None], (B, 1)))
+    positions = (jnp.broadcast_to(pos[None, None], (B, 1))
+                 if pos.ndim == 0 else pos[:, None])
+    ctx = Ctx(positions=positions)
     if cfg.frontend == "vision":
         ctx.media = media.astype(cfg.dtype) @ \
             params["frontend_proj"].astype(cfg.dtype)

@@ -1,0 +1,22 @@
+"""Request-level serving: continuous batching over a live ParameterDB.
+
+Public surface:
+
+  * :class:`ServeEngine` / :class:`ServeConfig` — the engine (engine.py)
+  * :func:`open_loop_requests` / :class:`Request` — workload (workload.py)
+  * :class:`LiveParamDB` / :class:`StaticParams` — parameter handles
+    (live_db.py)
+  * paged-cache building blocks (paged_cache.py) for tests and tools
+"""
+from .engine import FinishedRequest, ServeConfig, ServeEngine, ServeReport
+from .live_db import LiveParamDB, ReadRecord, StaticParams
+from .paged_cache import (PageAllocator, init_paged_cache, make_evict_fn,
+                          make_join_fn, page_classes)
+from .workload import Request, open_loop_requests
+
+__all__ = [
+    "FinishedRequest", "LiveParamDB", "PageAllocator", "ReadRecord",
+    "Request", "ServeConfig", "ServeEngine", "ServeReport", "StaticParams",
+    "init_paged_cache", "make_evict_fn", "make_join_fn",
+    "open_loop_requests", "page_classes",
+]

@@ -1,0 +1,289 @@
+"""Request-level serving engine: continuous batching over a live ParameterDB.
+
+The engine owns ``batch_size`` sequence *slots* backed by one paged KV
+cache (:mod:`repro.serve.paged_cache`).  Requests arrive on an open-loop
+clock (:mod:`repro.serve.workload`); the scheduler joins a new sequence
+the moment a slot frees up and evicts it the moment it finishes — decode
+never drains the batch.  Every decode step runs the full (B,) batch with
+per-sequence positions; idle slots sit at pos 0 with their page tables on
+the junk page, so they cost one masked lane and touch no live state.
+
+Parameters are never owned: each prefill and each decode step reads the
+current tree from a :class:`repro.serve.live_db.LiveParamDB` (or
+:class:`StaticParams`), so a trainer can publish new weights mid-serve
+under the data-centric admissible-delay contract.
+
+The classic static baseline is the same engine with ``continuous=False``:
+admission only happens when every slot is free (and waits until a full
+batch has arrived), which reintroduces the drain-the-batch barrier — the
+difference between the two modes is purely scheduling policy, measured by
+benchmarks/serve_bench.py.
+
+Two clocks: ``"wall"`` (arrivals in seconds, ``time.perf_counter``) for
+benchmarking, ``"steps"`` (arrivals in decode-step indices, a virtual
+clock) for deterministic tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from collections.abc import Mapping
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.config import ModelConfig
+from ..models.transformer import decode_step, prefill
+from .live_db import StaticParams
+from .paged_cache import (PageAllocator, init_paged_cache, make_evict_fn,
+                          make_join_fn)
+from .workload import Request
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Engine knobs (model architecture comes from ModelConfig)."""
+    batch_size: int = 4          # sequence slots (B_max)
+    page_size: int = 8           # tokens per KV page
+    cache_len: int = 128         # logical ring length for full-attn layers
+    continuous: bool = True      # False = static drain-the-batch baseline
+    clock: str = "wall"          # "wall" (seconds) | "steps" (decode steps)
+    warmup: bool = True          # compile before starting the clock
+
+    def __post_init__(self):
+        if self.clock not in ("wall", "steps"):
+            raise ValueError(f"unknown clock {self.clock!r}")
+
+
+@dataclasses.dataclass
+class FinishedRequest:
+    rid: int
+    arrival: float
+    t_first: float               # clock at first token (end of prefill)
+    t_done: float                # clock at last token
+    tokens: tuple[int, ...]
+
+    @property
+    def latency(self) -> float:
+        return self.t_done - self.arrival
+
+
+@dataclasses.dataclass
+class ServeReport:
+    mode: str                    # "continuous" | "static"
+    n_requests: int
+    total_tokens: int
+    duration: float              # clock units (s or steps)
+    tokens_per_sec: float        # tokens / duration (per-step for "steps")
+    latency_p50: float
+    latency_p99: float
+    decode_steps: int
+    utilization: float           # mean fraction of live slots per decode step
+    outputs: dict[int, tuple[int, ...]]
+
+
+class _Slot:
+    __slots__ = ("req", "remaining", "tokens", "t_first")
+
+    def __init__(self, req: Request, remaining: int, first_tok: int,
+                 t_first: float):
+        self.req = req
+        self.remaining = remaining
+        self.tokens = [first_tok]
+        self.t_first = t_first
+
+
+class ServeEngine:
+    """One model, one paged cache, ``batch_size`` sequence slots."""
+
+    def __init__(self, cfg: ModelConfig, params: Any, scfg: ServeConfig):
+        if cfg.frontend == "vision":
+            raise NotImplementedError(
+                "serving engine is text-only for now; vision archs need "
+                "per-request media plumbing through admission and decode")
+        self.cfg, self.scfg = cfg, scfg
+        # a raw param pytree (a Mapping) gets the frozen handle; anything
+        # else exposing get() is treated as a live handle (LiveParamDB)
+        self.db = (StaticParams(params)
+                   if isinstance(params, Mapping) or not hasattr(params, "get")
+                   else params)
+        B = scfg.batch_size
+        self.alloc = PageAllocator(cfg, B, scfg.cache_len, scfg.page_size)
+        self.cache = init_paged_cache(cfg, B, scfg.cache_len, scfg.page_size)
+        self._join = jax.jit(make_join_fn(cfg, scfg.cache_len,
+                                          scfg.page_size))
+        self._evict = jax.jit(make_evict_fn(cfg, scfg.cache_len,
+                                            scfg.page_size))
+        self._prefill = jax.jit(lambda p, t: prefill(
+            p, t, cfg, cache_len=scfg.cache_len))
+
+        def _step(p, c, tok, pos):
+            logits, c = decode_step(p, c, tok, pos, cfg)
+            return jnp.argmax(logits[:, -1], -1).astype(jnp.int32), c
+
+        self._decode = jax.jit(_step)
+        self._tok = np.zeros((B, 1), np.int32)
+        self._pos = np.zeros((B,), np.int32)
+        self.slots: list[_Slot | None] = [None] * B
+        self.decode_steps = 0
+        self._live_slot_steps = 0
+
+    # -- clock ------------------------------------------------------------
+
+    def _now(self) -> float:
+        if self.scfg.clock == "wall":
+            return time.perf_counter() - self._t0
+        return self._vnow
+
+    def _advance_to(self, t: float) -> None:
+        """Idle fast-forward to the next arrival."""
+        if self.scfg.clock == "wall":
+            time.sleep(max(0.0, t - self._now()))
+        else:
+            self._vnow = max(self._vnow, t)
+
+    # -- admission --------------------------------------------------------
+
+    def _free_slot(self) -> int | None:
+        for b, s in enumerate(self.slots):
+            if s is None:
+                return b
+        return None
+
+    def _admit(self, req: Request, now: float,
+               finished: list[FinishedRequest]) -> None:
+        params = self.db.get()
+        tokens = jnp.asarray([req.prompt], jnp.int32)
+        logits, dense = self._prefill(params, tokens)
+        first = int(jnp.argmax(logits[0]))
+        if req.gen_len <= 1:       # prompt-only request: done at prefill
+            finished.append(FinishedRequest(
+                req.rid, req.arrival, now, now, (first,)))
+            return
+        b = self._free_slot()
+        assert b is not None, "admission with no free slot"
+        rows = {L: jnp.asarray(ids) for L, ids in
+                self.alloc.alloc(b).items()}
+        self.cache = self._join(self.cache, dense,
+                                jnp.asarray(b, jnp.int32), rows)
+        self._tok[b, 0] = first
+        self._pos[b] = len(req.prompt)
+        self.slots[b] = _Slot(req, req.gen_len - 1, first, now)
+
+    def _try_admit(self, queue: deque, now: float, n_left: int,
+                   finished: list[FinishedRequest]) -> bool:
+        admitted = False
+        if self.scfg.continuous:
+            while queue and self._free_slot() is not None:
+                self._admit(queue.popleft(), now, finished)
+                admitted = True
+        else:
+            # static baseline: wait for an empty engine AND a full batch
+            # (or the tail of the workload), then admit the whole wave
+            want = min(self.scfg.batch_size, n_left)
+            if all(s is None for s in self.slots) and len(queue) >= want:
+                for _ in range(want):
+                    self._admit(queue.popleft(), now, finished)
+                    admitted = True
+        return admitted
+
+    def _retire(self, b: int, now: float,
+                finished: list[FinishedRequest]) -> None:
+        s = self.slots[b]
+        finished.append(FinishedRequest(
+            s.req.rid, s.req.arrival, s.t_first, now, tuple(s.tokens)))
+        self.cache = self._evict(self.cache, jnp.asarray(b, jnp.int32))
+        self.alloc.free_slot(b)
+        self._tok[b, 0] = 0
+        self._pos[b] = 0
+        self.slots[b] = None
+
+    # -- warmup -----------------------------------------------------------
+
+    def _warmup(self, requests: list[Request]) -> None:
+        """Compile every shape the run will hit before the clock starts."""
+        params = self.db.get()
+        dense = None
+        for S in sorted({len(r.prompt) for r in requests}):
+            logits, dense = self._prefill(
+                params, jnp.zeros((1, S), jnp.int32))
+        if dense is not None:
+            rows = {L: jnp.zeros((npp,), jnp.int32)
+                    for L, npp in self.alloc.classes.items()}
+            self._join(self.cache, dense, jnp.asarray(0, jnp.int32), rows)
+        self._evict(self.cache, jnp.asarray(0, jnp.int32))
+        out, _ = self._decode(params, self.cache, jnp.asarray(self._tok),
+                              jnp.asarray(self._pos))
+        jax.block_until_ready(out)
+
+    # -- main loop --------------------------------------------------------
+
+    def run(self, requests: list[Request],
+            step_hook: Callable[[int], None] | None = None) -> ServeReport:
+        """Serve ``requests`` to completion; returns the run report.
+
+        ``step_hook(decode_step_index)`` fires after every decode step —
+        the deterministic stand-in for a concurrent trainer (tests publish
+        new weights from it).
+        """
+        reqs = sorted(requests, key=lambda r: r.arrival)
+        if self.scfg.warmup:
+            self._warmup(reqs)
+        pending = deque(reqs)
+        queue: deque[Request] = deque()
+        finished: list[FinishedRequest] = []
+        self._t0 = time.perf_counter()
+        self._vnow = 0.0
+
+        while len(finished) < len(reqs):
+            now = self._now()
+            while pending and pending[0].arrival <= now:
+                queue.append(pending.popleft())
+            n_left = len(pending) + len(queue)
+            admitted = self._try_admit(queue, now, n_left, finished)
+            if all(s is None for s in self.slots):
+                if not admitted and pending:
+                    self._advance_to(pending[0].arrival)
+                continue
+
+            params = self.db.get()
+            toks, self.cache = self._decode(
+                params, self.cache, jnp.asarray(self._tok),
+                jnp.asarray(self._pos))
+            toks = np.asarray(toks)
+            self.decode_steps += 1
+            if self.scfg.clock == "steps":
+                self._vnow += 1.0
+            now = self._now()
+            for b, s in enumerate(self.slots):
+                if s is None:
+                    continue
+                self._live_slot_steps += 1
+                s.tokens.append(int(toks[b]))
+                self._tok[b, 0] = int(toks[b])
+                self._pos[b] += 1
+                s.remaining -= 1
+                if s.remaining == 0:
+                    self._retire(b, now, finished)
+            if step_hook is not None:
+                step_hook(self.decode_steps)
+
+        duration = max(self._now(), 1e-9)
+        lat = np.array([f.latency for f in finished])
+        total = sum(len(f.tokens) for f in finished)
+        util = (self._live_slot_steps /
+                (self.decode_steps * self.scfg.batch_size)
+                if self.decode_steps else 0.0)
+        return ServeReport(
+            mode="continuous" if self.scfg.continuous else "static",
+            n_requests=len(finished), total_tokens=total,
+            duration=float(duration),
+            tokens_per_sec=total / duration,
+            latency_p50=float(np.percentile(lat, 50)),
+            latency_p99=float(np.percentile(lat, 99)),
+            decode_steps=self.decode_steps,
+            utilization=util,
+            outputs={f.rid: f.tokens for f in finished})

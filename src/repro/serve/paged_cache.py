@@ -1,0 +1,205 @@
+"""Paged per-sequence decode caches: fixed-size pages + a free-list allocator.
+
+The serving engine holds ``batch`` sequence *slots*.  Dense decode caches
+would give each slot a private (L, KV, hd) ring per attention layer; here
+every attention layer instead shares one pool of fixed-size pages, and each
+slot owns a page table mapping its logical ring pages to physical pool
+pages.  Joining a sequence allocates pages from a free list and scatters
+its prefilled ring into them; evicting returns the pages.  The logical
+view (``slot = pos % L``) is exactly the dense ring, so the existing
+ring-slot masked decode-attention kernel runs unchanged on the gathered
+view (models/attention.py ``attention_decode_paged`` +
+kernels/page_gather.py).
+
+Layers with the same logical length L form one *page class* (full-context
+``attn`` layers vs windowed ``local``/``swa`` rings); all layers of a class
+share one page-table per slot, so the allocator hands out one row of page
+ids per (slot, class).  Each class pool reserves one extra *junk page*:
+freed slots' page tables point at it, so the unconditional per-step KV
+write of an idle batch row lands in the junk page and can never corrupt a
+live sequence's pages.
+
+Recurrent state (rwkv6 / rglru) is O(1) per sequence and stays a dense
+``batch``-row array — "paging" it would be indirection for nothing; join
+simply overwrites row ``b``.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import attention as attn_mod
+from ..models import rglru as rglru_mod
+from ..models import rwkv6 as rwkv_mod
+from ..models.config import ModelConfig
+
+ATTN_KINDS = ("attn", "local", "swa")
+
+
+def page_classes(cfg: ModelConfig, cache_len: int,
+                 page_size: int) -> dict[int, int]:
+    """{logical length L: pages per sequence} over the model's attention
+    kinds.  Every L must be a multiple of ``page_size`` so the ring
+    modulus is preserved across the page boundary."""
+    classes: dict[int, int] = {}
+    for kind in set(cfg.layer_kinds):
+        if kind not in ATTN_KINDS:
+            continue
+        L = cfg.kv_cache_len(kind, cache_len)
+        if L % page_size != 0:
+            raise ValueError(
+                f"page_size {page_size} must divide cache length {L} "
+                f"(kind {kind!r}; pick cache_len/window multiples of it)")
+        classes[L] = L // page_size
+    return classes
+
+
+class PageAllocator:
+    """Free-list page allocator over the page classes of one engine.
+
+    Pure host-side bookkeeping: physical page ids live in numpy tables;
+    the device-side copies inside the cache pytree are written by the
+    jitted join/evict functions below.  Pool capacity is
+    ``batch * pages_per_seq + 1`` per class (the +1 is the junk page, id
+    ``P - 1``), so allocation succeeds iff a sequence slot is free.
+    """
+
+    def __init__(self, cfg: ModelConfig, batch: int, cache_len: int,
+                 page_size: int):
+        self.batch = batch
+        self.page_size = page_size
+        self.classes = page_classes(cfg, cache_len, page_size)
+        self.junk = {L: batch * npp for L, npp in self.classes.items()}
+        self.free: dict[int, list[int]] = {
+            L: list(range(batch * npp)) for L, npp in self.classes.items()}
+        self.tables: dict[int, np.ndarray] = {
+            L: np.full((batch, npp), self.junk[L], np.int32)
+            for L, npp in self.classes.items()}
+
+    def n_free(self, L: int) -> int:
+        return len(self.free[L])
+
+    def alloc(self, b: int) -> dict[int, np.ndarray]:
+        """Allocate slot ``b``'s pages in every class; returns the page-id
+        rows ({L: (n_pp,) int32}) to hand to the jitted join."""
+        rows = {}
+        for L, npp in self.classes.items():
+            if (self.tables[L][b] != self.junk[L]).any():
+                raise ValueError(f"slot {b} already holds pages (L={L})")
+            if len(self.free[L]) < npp:
+                raise RuntimeError(f"page pool exhausted (L={L})")
+            ids = np.array([self.free[L].pop() for _ in range(npp)],
+                           np.int32)
+            self.tables[L][b] = ids
+            rows[L] = ids
+        return rows
+
+    def free_slot(self, b: int) -> None:
+        """Return slot ``b``'s pages to the free lists; its table row goes
+        back to the junk page."""
+        for L in self.classes:
+            row = self.tables[L][b]
+            live = row[row != self.junk[L]]
+            self.free[L].extend(int(p) for p in live)
+            self.tables[L][b] = self.junk[L]
+
+
+def _walk_slots(cfg: ModelConfig):
+    for gi, g in enumerate(cfg.groups):
+        for si, kind in enumerate(g.pattern):
+            yield f"g{gi}", f"s{si}", kind, g.n
+
+
+def init_paged_cache(cfg: ModelConfig, batch: int, cache_len: int,
+                     page_size: int) -> dict:
+    """Paged analogue of ``transformer.init_cache``: attention slots get
+    {"pk", "pv": (stack, P, page, KV, hd) pools, "pt": (stack, B, n_pp)
+    tables} (tables start at the junk page); recurrent slots keep their
+    dense per-row state."""
+    classes = page_classes(cfg, cache_len, page_size)
+    cache: dict[str, Any] = {}
+    for gkey, skey, kind, n in _walk_slots(cfg):
+        slots = cache.setdefault(gkey, {})
+        stack = (n,)
+        if kind in ATTN_KINDS:
+            L = cfg.kv_cache_len(kind, cache_len)
+            npp = classes[L]
+            P = batch * npp + 1
+            pool = jnp.zeros(stack + (P, page_size, cfg.n_kv_heads, cfg.hd),
+                             cfg.dtype)
+            pt = jnp.full(stack + (batch, npp), batch * npp, jnp.int32)
+            slots[skey] = {"pk": pool, "pv": pool, "pt": pt}
+        elif kind == "rwkv6":
+            slots[skey] = rwkv_mod.init_rwkv_state(cfg, batch, stack)
+        elif kind == "rglru":
+            slots[skey] = rglru_mod.init_rglru_state(cfg, batch, stack)
+        else:                       # xattn: stateless
+            slots[skey] = {}
+    return cache
+
+
+def make_join_fn(cfg: ModelConfig, cache_len: int,
+                 page_size: int) -> Callable:
+    """Build ``join(cache, dense, b, rows) -> cache``: scatter one
+    sequence's dense prefill cache (``prefill(..., cache_len)`` with
+    B=1) into paged slot ``b``.  ``rows``: {L: (n_pp,) int32 page ids}
+    from ``PageAllocator.alloc``.  Jit-able: one compilation per engine
+    (dense cache shape depends only on cache_len)."""
+
+    def join(cache: dict, dense: dict, b: jnp.ndarray,
+             rows: dict[int, jnp.ndarray]) -> dict:
+        new = {}
+        for gkey, skey, kind, n in _walk_slots(cfg):
+            slots = new.setdefault(gkey, {})
+            pc, dc = cache[gkey][skey], dense[gkey][skey]
+            if kind in ATTN_KINDS:
+                L = cfg.kv_cache_len(kind, cache_len)
+                ids = rows[L]
+                npp = ids.shape[0]
+                dk = dc["k"][:, 0].reshape(n, npp, page_size,
+                                           cfg.n_kv_heads, cfg.hd)
+                dv = dc["v"][:, 0].reshape(n, npp, page_size,
+                                           cfg.n_kv_heads, cfg.hd)
+                slots[skey] = {
+                    "pk": pc["pk"].at[:, ids].set(dk.astype(pc["pk"].dtype)),
+                    "pv": pc["pv"].at[:, ids].set(dv.astype(pc["pv"].dtype)),
+                    "pt": pc["pt"].at[:, b].set(ids),
+                }
+            elif kind in ("rwkv6", "rglru"):
+                slots[skey] = jax.tree.map(
+                    lambda p, d: p.at[:, b].set(d[:, 0].astype(p.dtype)),
+                    pc, dc)
+            else:
+                slots[skey] = pc
+        return new
+
+    return join
+
+
+def make_evict_fn(cfg: ModelConfig, cache_len: int,
+                  page_size: int) -> Callable:
+    """Build ``evict(cache, b) -> cache``: point slot ``b``'s page tables
+    back at the junk page (page data needs no clearing — a later join
+    overwrites every page it allocates, and junk-pointing tables keep the
+    idle row's per-step KV write off live pages)."""
+    classes = page_classes(cfg, cache_len, page_size)
+
+    def evict(cache: dict, b: jnp.ndarray) -> dict:
+        new = {}
+        for gkey, skey, kind, n in _walk_slots(cfg):
+            slots = new.setdefault(gkey, {})
+            pc = cache[gkey][skey]
+            if kind in ATTN_KINDS:
+                L = cfg.kv_cache_len(kind, cache_len)
+                npp = classes[L]
+                batch = pc["pt"].shape[1]
+                junk_row = jnp.full((npp,), batch * npp, jnp.int32)
+                slots[skey] = {**pc, "pt": pc["pt"].at[:, b].set(junk_row)}
+            else:
+                slots[skey] = pc
+        return new
+
+    return evict

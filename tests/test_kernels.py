@@ -8,6 +8,7 @@ from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.moe_matmul import moe_grouped_ffn
+from repro.kernels.page_gather import page_gather
 from repro.kernels.rglru_scan import rglru_scan
 from repro.kernels.ring_gather import ring_gather
 from repro.kernels.rwkv6_scan import rwkv6_scan
@@ -143,6 +144,24 @@ class TestDecodeAttentionFused:
                                    np.asarray(want, np.float32),
                                    **TOL[dtype])
 
+    def test_per_sequence_valid_rows(self):
+        """(B, L) valid — continuous batching puts every sequence at its
+        own position, so each batch row carries its own liveness mask."""
+        ks = jax.random.split(jax.random.PRNGKey(15), 3)
+        B, L, H, KV, hd = 3, 32, 4, 2, 16
+        q = _rand(ks[0], (B, 1, H, hd), jnp.float32)
+        k = _rand(ks[1], (B, L, KV, hd), jnp.float32)
+        v = _rand(ks[2], (B, L, KV, hd), jnp.float32)
+        # ring masks for pos = 0, 13, 45 (slot = pos % L, wrap-around row)
+        pos = jnp.asarray([0, 13, 45])[:, None]
+        idx = jnp.arange(L)[None, :]
+        abs_pos = pos - jnp.mod(pos - idx, L)
+        valid = (abs_pos >= 0) & (abs_pos >= pos - (L - 1))
+        assert valid.shape == (B, L) and int(valid[0].sum()) == 1
+        want = ref.attention_decode(q, k, v, valid)
+        got = decode_attention(q, k, v, valid, block_k=16, interpret=True)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
     def test_single_live_slot(self):
         """pos=0: only slot 0 valid — blocks past it are fully dead and
         must not pollute the online softmax."""
@@ -184,6 +203,34 @@ class TestRingGatherKernel:
         np.testing.assert_array_equal(
             np.asarray(ring_gather(hist, idx, interpret=True)),
             np.asarray(ref.ring_gather(hist, idx)))
+
+
+class TestPageGatherKernel:
+    """Scalar-prefetch page gather vs pool[page_table] — bit-identical."""
+
+    @pytest.mark.parametrize("P,page,KV,hd,B,npp,block", [
+        (9, 8, 2, 16, 2, 4, 1024),     # one tile per row
+        (5, 4, 1, 8, 2, 2, 16),        # multi-tile rows
+        (7, 8, 2, 8, 3, 2, 64),        # clipped trailing tile
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_bit_identical(self, P, page, KV, hd, B, npp, block, dtype):
+        ks = jax.random.split(jax.random.PRNGKey(16), 2)
+        pool = _rand(ks[0], (P, page, KV, hd), dtype)
+        pt = jax.random.randint(ks[1], (B, npp), 0, P).astype(jnp.int32)
+        got = page_gather(pool, pt, block=block, interpret=True)
+        want = ref.page_gather(pool, pt)
+        assert got.shape == (B, npp * page, KV, hd)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_shared_and_junk_pages(self):
+        """Two sequences may map the same physical page (and idle slots
+        all map the junk page) — the gather must not care."""
+        pool = _rand(jax.random.PRNGKey(17), (4, 4, 1, 8), jnp.float32)
+        pt = jnp.asarray([[2, 2], [3, 3]], jnp.int32)
+        got = page_gather(pool, pt, interpret=True)
+        np.testing.assert_array_equal(np.asarray(got),
+                                      np.asarray(ref.page_gather(pool, pt)))
 
 
 def _routing(key, G, g, E, C, k=2):
