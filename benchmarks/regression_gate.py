@@ -74,7 +74,8 @@ def main() -> int:
     if os.path.exists(artifacts.SERVE_JSON):
         from . import serve_bench
         suites.append(("serve", artifacts.SERVE_JSON,
-                       lambda: serve_bench.bench_rows(smoke=True)))
+                       lambda: serve_bench.bench_rows(smoke=True),
+                       serve_bench.REQUIRED_KEYS))
     else:
         print(f"# no baseline {artifacts.SERVE_JSON}; skipping",
               file=sys.stderr)
@@ -83,8 +84,21 @@ def main() -> int:
         return 0
 
     all_failures = []
-    for topic, path, run in suites:
+    for topic, path, run, *required in suites:
         baseline = artifacts.load_bench_json(path)
+        base_names = {e.get("name") for e in baseline
+                      if isinstance(e, dict)}
+        missing = [k for k in (required[0] if required else ())
+                   if k not in base_names]
+        if missing:
+            # a stale baseline silently un-gates whole suites: fail loud
+            all_failures += [f"{topic}: baseline {path} is missing "
+                             f"required key {k!r} — rerun the bench with "
+                             "--json and check the BENCH file in"
+                             for k in missing]
+            print(f"{topic}: baseline missing {len(missing)} required "
+                  "key(s); skipping re-measure")
+            continue
         fresh = {name: float(us) for name, us, _ in run()}
         failures, checked = compare(baseline, fresh)
         print(f"{topic}: checked {len(checked)} entries, "

@@ -18,6 +18,20 @@ slot to finish before starting the next wave; continuous joins/evicts
 mid-decode).  Rates are chosen above the static baseline's sustained
 capacity so the comparison is service-limited, not arrival-limited.
 
+A second suite runs long shared-prefix prompts (hot system prompts +
+unique suffixes, Zipf-weighted) through three prompt paths:
+
+  * ``serve/nocache@shared``  — whole-prompt prefill at admission (the
+    PR-5 engine path; every prompt recomputed, batch stalls per prefill).
+  * ``serve/chunked@shared``  — chunked prefill interleaved with decode
+    (no prefix reuse; isolates the scheduling change).
+  * ``serve/prefix@shared``   — prefix cache + chunked prefill: requests
+    adopt the KV pages of their longest cached prefix.
+
+plus derived-only rows (us_per_call 0, ungated): the prefix/nocache
+tok/s ratio (``serve/prefix_speedup@shared``), time-to-first-token p50
+per path and p99 for prefix (ms), and the prompt-token cache hit rate.
+
   PYTHONPATH=src python -m benchmarks.serve_bench --smoke --json
 """
 from __future__ import annotations
@@ -33,6 +47,20 @@ PROMPT_LENS = (8, 16, 32)
 GEN_LENS = (8, 16, 32, 96)            # wide spread: the static baseline's
 CACHE_LEN = 128                       # slots idle at mean/max = 0.4; fits
 #                                       prompt<=32 + gen<=96
+SHARED_RATE = 200.0                   # service-limited: prefill-bound mix
+SHARED_CACHE_LEN = 512                # long-prompt ring (no wrap: 496+8)
+SHARED_PREFIX_LEN = 480               # hot prefix; prompts 488/496 <= 512
+SHARED_GEN_LENS = (4, 8)              # short gens: prompt work dominates
+SHARED_CHUNK = 64                     # prefill chunk for chunked/prefix
+
+# keys the regression gate requires in BENCH_serve.json — a baseline
+# missing one was generated before this suite and must be regenerated
+REQUIRED_KEYS = (
+    "serve/cont@lo", "serve/static@lo",
+    "serve/nocache@shared", "serve/chunked@shared", "serve/prefix@shared",
+    "serve/prefix_speedup@shared", "serve/hit_rate@shared",
+    "serve/ttft_p50_nocache@shared", "serve/ttft_p50_prefix@shared",
+)
 
 
 @functools.lru_cache(maxsize=1)
@@ -69,6 +97,29 @@ def _run(mode_continuous: bool, rate: float, n_requests: int, seed: int,
     return best
 
 
+def _run_shared(mode: str, n_requests: int, seed: int, repeats: int = 2):
+    """One shared-prefix run; mode in {nocache, chunked, prefix}."""
+    from repro.serve import (ServeConfig, ServeEngine,
+                             shared_prefix_requests)
+
+    cfg, params = _model()
+    requests = shared_prefix_requests(
+        n_requests, SHARED_RATE, cfg.vocab_size, n_prefixes=4,
+        prefix_len=SHARED_PREFIX_LEN, suffix_lens=(8, 16),
+        gen_lens=SHARED_GEN_LENS, zipf_a=1.2, seed=seed)
+    scfg = ServeConfig(
+        batch_size=BATCH, page_size=PAGE, cache_len=SHARED_CACHE_LEN,
+        continuous=True,
+        prefill_chunk=0 if mode == "nocache" else SHARED_CHUNK,
+        prefix_cache=(mode == "prefix"))
+    best = None
+    for _ in range(repeats):
+        rep = ServeEngine(cfg, params, scfg).run(requests)
+        if best is None or rep.tokens_per_sec > best.tokens_per_sec:
+            best = rep
+    return best
+
+
 def bench_rows(smoke: bool = False) -> list[tuple[str, float, float]]:
     n_requests = 48 if smoke else 96
     repeats = 2 if smoke else 3
@@ -88,6 +139,25 @@ def bench_rows(smoke: bool = False) -> list[tuple[str, float, float]]:
                      reports["cont"].latency_p50 * 1e3))
         rows.append((f"serve/lat_p99@{tag}", 0.0,
                      reports["cont"].latency_p99 * 1e3))
+
+    shared = {}
+    n_shared = 24 if smoke else 48    # long prompts: keep runtime bounded
+    for mode in ("nocache", "chunked", "prefix"):
+        rep = _run_shared(mode, n_shared, seed=11, repeats=repeats)
+        shared[mode] = rep
+        us_per_tok = rep.duration * 1e6 / max(rep.total_tokens, 1)
+        rows.append((f"serve/{mode}@shared", us_per_tok,
+                     rep.tokens_per_sec))
+    rows.append(("serve/prefix_speedup@shared", 0.0,
+                 shared["prefix"].tokens_per_sec /
+                 shared["nocache"].tokens_per_sec))
+    for mode in ("nocache", "chunked", "prefix"):
+        rows.append((f"serve/ttft_p50_{mode}@shared", 0.0,
+                     shared[mode].ttft_p50 * 1e3))
+    rows.append(("serve/ttft_p99_prefix@shared", 0.0,
+                 shared["prefix"].ttft_p99 * 1e3))
+    rows.append(("serve/hit_rate@shared", 0.0,
+                 shared["prefix"].prefix_hit_rate))
     return rows
 
 

@@ -77,6 +77,20 @@ def page_gather(pool, page_table, impl: str | None = None):
     return _pg(pool, page_table, interpret=(impl == "interpret"))
 
 
+def prefill_page_attention(q, k_ctx, v_ctx, k_new, v_new, ctx_pos, q_pos,
+                           window: int = 0, impl: str | None = None):
+    """Chunked-prefill attention: chunk queries (B, C, H, hd) against the
+    gathered paged context (B, L, KV, hd) plus in-chunk keys, masked by
+    absolute positions (ctx_pos/q_pos; negative = dead slot)."""
+    impl = impl or kernel_impl()
+    if impl == "ref":
+        return ref.prefill_page_attention(q, k_ctx, v_ctx, k_new, v_new,
+                                          ctx_pos, q_pos, window=window)
+    from .page_gather import prefill_page_attention as _ppa
+    return _ppa(q, k_ctx, v_ctx, k_new, v_new, ctx_pos, q_pos,
+                window=window, interpret=(impl == "interpret"))
+
+
 def moe_grouped_ffn(dispatch, combine, xg, wg, wu, wd, ep=None,
                     impl: str | None = None):
     """Grouped-expert FFN over dispatched token groups (models/moe.py).

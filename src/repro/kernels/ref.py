@@ -100,6 +100,40 @@ def attention_decode(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     return out.astype(q.dtype)
 
 
+def prefill_page_attention(q: jnp.ndarray, k_ctx: jnp.ndarray,
+                           v_ctx: jnp.ndarray, k_new: jnp.ndarray,
+                           v_new: jnp.ndarray, ctx_pos: jnp.ndarray,
+                           q_pos: jnp.ndarray,
+                           window: int = 0) -> jnp.ndarray:
+    """Chunked-prefill attention against a gathered ring/paged context.
+
+    q, k_new, v_new: (B, C, H|KV, hd) — the current prompt chunk (RoPE'd);
+    k_ctx, v_ctx: (B, L, KV, hd) — the logical ring view of prior chunks'
+    pages (page_gather output); ctx_pos: (B, L) int32 absolute position
+    held by each ring slot, negative = dead slot; q_pos: (B, C) int32
+    absolute positions of the chunk tokens.  Keys are masked to
+    ``0 <= kpos <= qpos`` (and ``kpos > qpos - window`` when window > 0),
+    so a chunk starting mid-sequence attends to exactly the prefix it
+    would see in a full-sequence prefill.  Returns (B, C, H, hd).
+    """
+    B, C, H, hd = q.shape
+    k = jnp.concatenate([k_ctx, k_new.astype(k_ctx.dtype)], axis=1)
+    v = jnp.concatenate([v_ctx, v_new.astype(v_ctx.dtype)], axis=1)
+    kpos = jnp.concatenate([ctx_pos, q_pos], axis=1)        # (B, L + C)
+    k = _repeat_kv(k, H)
+    v = _repeat_kv(v, H)
+    scale = hd ** -0.5
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    mask = (kpos[:, None, :] >= 0) & (kpos[:, None, :] <= q_pos[:, :, None])
+    if window > 0:
+        mask &= kpos[:, None, :] > q_pos[:, :, None] - window
+    scores = jnp.where(mask[:, None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v)
+    return out.astype(q.dtype)
+
+
 def ring_gather(hist: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
     """hist: (size, ...) stacked versions; idx: scalar -> hist[idx]."""
     return jax.lax.dynamic_index_in_dim(hist, jnp.asarray(idx, jnp.int32),

@@ -200,6 +200,54 @@ def attention_decode_paged(params: dict, x: jnp.ndarray, cache: dict,
     return out, {"pk": pk, "pv": pv, "pt": pt}
 
 
+def attention_prefill_paged(params: dict, x: jnp.ndarray, cache: dict,
+                            cfg: ModelConfig, kind: str,
+                            start: jnp.ndarray) -> tuple[jnp.ndarray, dict]:
+    """One prompt chunk against a paged KV cache (chunked prefill).
+
+    x: (1, C, d) — chunk tokens at absolute positions start..start+C-1
+    (start: scalar int32); cache: {"pk", "pv": (P, page, KV, hd) pools,
+    "pt": (1, n_pp) page-table row of the slot being prefilled}.  Prior
+    chunks' K/V are read through the page table (gather *before* the
+    chunk's own K/V are scattered in, so windowed rings that wrap within
+    this chunk still see the pre-wrap entries they legitimately cover),
+    masked by absolute position exactly like a full-sequence causal
+    prefill.  C must not exceed the ring length L (the serve engine caps
+    chunk size at the smallest page-class L so scatter slots are unique).
+    Returns (out (1, C, d), updated cache).
+    """
+    q, k_new, v_new = _qkv(params, x, cfg)
+    theta = _rope_theta(cfg, kind)
+    C = x.shape[1]
+    q_pos = (start + jnp.arange(C, dtype=jnp.int32))[None]    # (1, C)
+    q = apply_rope(q, q_pos, theta)
+    k_new = apply_rope(k_new, q_pos, theta)
+
+    pk, pv, pt = cache["pk"], cache["pv"], cache["pt"]
+    page = pk.shape[1]
+    L = pt.shape[1] * page
+    # absolute position held by each ring slot before this chunk lands:
+    # the newest prior entry is start-1, slot i holds last - (last-i) % L
+    idx = jnp.arange(L, dtype=jnp.int32)
+    last = start.astype(jnp.int32) - 1
+    abs_pos = last - jnp.mod(last - idx, L)
+    ctx_pos = jnp.where(abs_pos >= 0, abs_pos, -1)[None]      # (1, L)
+
+    k_ctx = kops.page_gather(pk, pt)                          # (1, L, KV, hd)
+    v_ctx = kops.page_gather(pv, pt)
+    window = cfg.window if kind in ("local", "swa") else 0
+    out = kops.prefill_page_attention(q, k_ctx, v_ctx, k_new, v_new,
+                                      ctx_pos, q_pos, window=window)
+
+    slot = jnp.mod(q_pos[0], L)                               # (C,)
+    phys = pt[0, slot // page]
+    off = slot % page
+    pk = pk.at[phys, off].set(k_new[0].astype(pk.dtype))
+    pv = pv.at[phys, off].set(v_new[0].astype(pv.dtype))
+    out = _merge_heads(out) @ params["wo"].astype(x.dtype)
+    return out, {"pk": pk, "pv": pv, "pt": pt}
+
+
 def _dyn_update(buf: jnp.ndarray, new: jnp.ndarray,
                 slot: jnp.ndarray) -> jnp.ndarray:
     """Write the (B,1,n_kv,hd) entry at ring index ``slot`` along axis 1.

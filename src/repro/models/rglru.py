@@ -74,7 +74,8 @@ def rglru_fwd(p: dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
 
 def rglru_decode(p: dict, x: jnp.ndarray, state: dict,
                  cfg: ModelConfig) -> tuple[jnp.ndarray, dict]:
-    """x: (B, 1, d); state: {'h': (B, dr) f32, 'conv': (B, cw-1, dr)}."""
+    """x: (B, T, d) (T=1 decode, T>1 prefill chunk); state: {'h': (B, dr)
+    f32, 'conv': (B, cw-1, dr)}."""
     dt = x.dtype
     y = jax.nn.gelu(x @ p["wy"].astype(dt), approximate=True)
     u_in = x @ p["wx"].astype(dt)
@@ -82,8 +83,10 @@ def rglru_decode(p: dict, x: jnp.ndarray, state: dict,
     a, i = _gates(p, u)
     h_seq, hT = kops.rglru_stateful(i * u, a, state["h"])
     out = (y * h_seq) @ p["wo"].astype(dt)
-    new_conv = jnp.concatenate([state["conv"][:, 1:],
-                                u_in.astype(state["conv"].dtype)], axis=1)
+    # conv carry = last cw-1 inputs across carry+chunk (T may exceed 1)
+    new_conv = jnp.concatenate([state["conv"],
+                                u_in.astype(state["conv"].dtype)],
+                               axis=1)[:, -(state["conv"].shape[1]):]
     return out, {"h": hT, "conv": new_conv}
 
 

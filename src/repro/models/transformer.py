@@ -399,6 +399,100 @@ def decode_step(params: dict, cache: dict, tokens: jnp.ndarray,
 
 
 # ---------------------------------------------------------------------------
+# Chunked prefill (repro.serve): one prompt chunk against the paged cache
+# ---------------------------------------------------------------------------
+
+def init_chunk_carry(cfg: ModelConfig, batch: int = 1) -> dict:
+    """Per-slot recurrent carry for chunked prefill (B=1 per prefilling
+    sequence).  Attention layers carry nothing — their state lives in the
+    page pools; recurrent layers carry their streaming state *outside*
+    the batch cache so interleaved decode steps can't touch it (it is
+    written into the cache row only at activation)."""
+    carry: dict[str, Any] = {}
+    for gi, g in enumerate(cfg.groups):
+        slots = {}
+        for si, kind in enumerate(g.pattern):
+            stack = (g.n,)
+            if kind == "rwkv6":
+                slots[f"s{si}"] = rwkv_mod.init_rwkv_state(cfg, batch, stack)
+            elif kind == "rglru":
+                slots[f"s{si}"] = rglru_mod.init_rglru_state(cfg, batch,
+                                                             stack)
+            else:
+                slots[f"s{si}"] = {}
+        carry[f"g{gi}"] = slots
+    return carry
+
+
+def _chunk_block(bp: dict, kind: str, x: jnp.ndarray, c: dict, car: dict,
+                 cfg: ModelConfig, ctx: Ctx, rows: dict, start: jnp.ndarray,
+                 cache_len: int) -> tuple[jnp.ndarray, dict, dict]:
+    h = apply_norm(bp["ln1"], x, cfg)
+    if kind in ("attn", "local", "swa"):
+        L = cfg.kv_cache_len(kind, cache_len)
+        tmp = {"pk": c["pk"], "pv": c["pv"], "pt": rows[L][None]}
+        mix, tmp = attn.attention_prefill_paged(bp["mix"], h, tmp, cfg,
+                                                kind, start)
+        c = {**c, "pk": tmp["pk"], "pv": tmp["pv"]}
+    elif kind == "xattn":
+        mix = attn.cross_attention_fwd(bp["mix"], h, ctx.media, cfg)
+    elif kind == "rwkv6":
+        mix, tc = rwkv_mod.time_mix_decode(
+            bp["mix"], h, {"S": car["S"], "x_last": car["x_last"]}, cfg)
+        car = {**car, **tc}
+    elif kind == "rglru":
+        mix, car = rglru_mod.rglru_decode(bp["mix"], h, car, cfg)
+    x = x + mix
+    h2 = apply_norm(bp["ln2"], x, cfg)
+    if kind == "rwkv6":
+        f = rwkv_mod.chan_mix_fwd(bp["ffn"], h2, cfg, x_last=car["cx_last"])
+        car = {**car, "cx_last": h2[:, -1]}
+    else:
+        f, _ = _apply_ffn(bp, kind, h2, cfg)
+    return x + f, c, car
+
+
+def prefill_chunk(params: dict, cache: dict, tokens: jnp.ndarray,
+                  start: jnp.ndarray, rows: dict, carry: dict,
+                  cfg: ModelConfig, cache_len: int
+                  ) -> tuple[jnp.ndarray, dict, dict]:
+    """Process one prompt chunk of an in-flight prefill against the paged
+    cache.  tokens: (1, C) at absolute positions start..start+C-1; rows:
+    {L: (n_pp,) int32} the slot's physical pages per page class (the
+    batch page table stays on the junk page until activation — decode
+    steps interleave freely); carry: ``init_chunk_carry`` pytree.
+    Returns (last-position logits (1, V), cache, carry)."""
+    B, C = tokens.shape
+    x = embed_tokens(params, tokens, cfg)
+    q_pos = (start.astype(jnp.int32) + jnp.arange(C, dtype=jnp.int32))[None]
+    ctx = Ctx(positions=jnp.broadcast_to(q_pos, (B, C)))
+
+    new_cache: dict[str, Any] = {}
+    new_carry: dict[str, Any] = {}
+    for gi, g in enumerate(cfg.groups):
+        gp = params["groups"][f"g{gi}"]
+
+        def body(xc, slice_, _g=g):
+            sp, sc, scar = slice_
+            new_slots, new_cars = {}, {}
+            for si, kind in enumerate(_g.pattern):
+                xc, nc, ncar = _chunk_block(sp[f"s{si}"], kind, xc,
+                                            sc[f"s{si}"], scar[f"s{si}"],
+                                            cfg, ctx, rows, start, cache_len)
+                new_slots[f"s{si}"] = nc
+                new_cars[f"s{si}"] = ncar
+            return xc, (new_slots, new_cars)
+
+        x, (cg, carg) = jax.lax.scan(
+            body, x, (gp, cache[f"g{gi}"], carry[f"g{gi}"]))
+        new_cache[f"g{gi}"] = cg
+        new_carry[f"g{gi}"] = carg
+
+    x = apply_norm(params["final_norm"], x[:, -1:], cfg)
+    return lm_logits(params, x, cfg)[:, 0], new_cache, new_carry
+
+
+# ---------------------------------------------------------------------------
 # Prefill (forward + cache construction)
 # ---------------------------------------------------------------------------
 

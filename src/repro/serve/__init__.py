@@ -3,20 +3,25 @@
 Public surface:
 
   * :class:`ServeEngine` / :class:`ServeConfig` — the engine (engine.py)
-  * :func:`open_loop_requests` / :class:`Request` — workload (workload.py)
+  * :func:`open_loop_requests` / :func:`shared_prefix_requests` /
+    :class:`Request` — workload (workload.py)
   * :class:`LiveParamDB` / :class:`StaticParams` — parameter handles
     (live_db.py)
+  * :class:`PrefixCache` — prompt-prefix radix trie (prefix_cache.py)
   * paged-cache building blocks (paged_cache.py) for tests and tools
 """
 from .engine import FinishedRequest, ServeConfig, ServeEngine, ServeReport
 from .live_db import LiveParamDB, ReadRecord, StaticParams
-from .paged_cache import (PageAllocator, init_paged_cache, make_evict_fn,
-                          make_join_fn, page_classes)
-from .workload import Request, open_loop_requests
+from .paged_cache import (PageAllocator, init_paged_cache, make_activate_fn,
+                          make_copy_page_fn, make_evict_fn, make_join_fn,
+                          page_classes)
+from .prefix_cache import PrefixCache
+from .workload import Request, open_loop_requests, shared_prefix_requests
 
 __all__ = [
-    "FinishedRequest", "LiveParamDB", "PageAllocator", "ReadRecord",
-    "Request", "ServeConfig", "ServeEngine", "ServeReport", "StaticParams",
-    "init_paged_cache", "make_evict_fn", "make_join_fn",
-    "open_loop_requests", "page_classes",
+    "FinishedRequest", "LiveParamDB", "PageAllocator", "PrefixCache",
+    "ReadRecord", "Request", "ServeConfig", "ServeEngine", "ServeReport",
+    "StaticParams", "init_paged_cache", "make_activate_fn",
+    "make_copy_page_fn", "make_evict_fn", "make_join_fn",
+    "open_loop_requests", "page_classes", "shared_prefix_requests",
 ]

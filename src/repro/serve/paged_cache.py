@@ -58,29 +58,72 @@ def page_classes(cfg: ModelConfig, cache_len: int,
 
 
 class PageAllocator:
-    """Free-list page allocator over the page classes of one engine.
+    """Refcounted free-list page allocator over one engine's page classes.
 
     Pure host-side bookkeeping: physical page ids live in numpy tables;
     the device-side copies inside the cache pytree are written by the
-    jitted join/evict functions below.  Pool capacity is
-    ``batch * pages_per_seq + 1`` per class (the +1 is the junk page, id
-    ``P - 1``), so allocation succeeds iff a sequence slot is free.
+    jitted join/evict functions below.  Pool capacity per class is
+    ``(batch + extra_seqs) * pages_per_seq + 1`` (the +1 is the junk
+    page, id ``P - 1``) — with the default ``extra_seqs=0``, allocation
+    succeeds iff a sequence slot is free; the extra headroom holds the
+    prefix cache's retained pages (repro.serve.prefix_cache) and the
+    transient copy-on-write duplicates.
+
+    Pages are refcounted so they can be *shared*: a slot adopting a
+    cached prefix and the prefix trie holding it each own one reference
+    (``incref``/``decref``); a page returns to the free list only when
+    its last owner drops it.  ``alloc``/``free_slot`` keep the PR-5
+    whole-slot semantics on top: a freshly allocated page is born with
+    one reference owned through the slot's table row, and ``free_slot``
+    drops one reference per table entry.
     """
 
     def __init__(self, cfg: ModelConfig, batch: int, cache_len: int,
-                 page_size: int):
+                 page_size: int, extra_seqs: int = 0):
         self.batch = batch
         self.page_size = page_size
         self.classes = page_classes(cfg, cache_len, page_size)
-        self.junk = {L: batch * npp for L, npp in self.classes.items()}
+        cap = {L: (batch + extra_seqs) * npp
+               for L, npp in self.classes.items()}
+        self.junk = dict(cap)
         self.free: dict[int, list[int]] = {
-            L: list(range(batch * npp)) for L, npp in self.classes.items()}
+            L: list(range(n)) for L, n in cap.items()}
+        self.refcount: dict[int, np.ndarray] = {
+            L: np.zeros(n, np.int32) for L, n in cap.items()}
         self.tables: dict[int, np.ndarray] = {
             L: np.full((batch, npp), self.junk[L], np.int32)
             for L, npp in self.classes.items()}
 
     def n_free(self, L: int) -> int:
         return len(self.free[L])
+
+    def alloc_pages(self, L: int, k: int) -> np.ndarray:
+        """Pop ``k`` pages of class ``L`` off the free list (each born
+        with refcount 1, owned by the caller)."""
+        if len(self.free[L]) < k:
+            raise RuntimeError(f"page pool exhausted (L={L})")
+        ids = np.array([self.free[L].pop() for _ in range(k)], np.int32)
+        self.refcount[L][ids] = 1
+        return ids
+
+    def incref(self, L: int, ids) -> None:
+        for p in np.atleast_1d(np.asarray(ids, np.int64)):
+            self.refcount[L][p] += 1
+
+    def decref(self, L: int, ids) -> None:
+        for p in np.atleast_1d(np.asarray(ids, np.int64)):
+            self.refcount[L][p] -= 1
+            if self.refcount[L][p] == 0:
+                self.free[L].append(int(p))
+            assert self.refcount[L][p] >= 0, f"page {p} over-freed (L={L})"
+
+    def install(self, b: int, rows: dict[int, np.ndarray]) -> None:
+        """Record slot ``b``'s page-id rows (caller already owns one
+        reference per page, e.g. via alloc_pages/incref)."""
+        for L, ids in rows.items():
+            if (self.tables[L][b] != self.junk[L]).any():
+                raise ValueError(f"slot {b} already holds pages (L={L})")
+            self.tables[L][b] = np.asarray(ids, np.int32)
 
     def alloc(self, b: int) -> dict[int, np.ndarray]:
         """Allocate slot ``b``'s pages in every class; returns the page-id
@@ -91,19 +134,18 @@ class PageAllocator:
                 raise ValueError(f"slot {b} already holds pages (L={L})")
             if len(self.free[L]) < npp:
                 raise RuntimeError(f"page pool exhausted (L={L})")
-            ids = np.array([self.free[L].pop() for _ in range(npp)],
-                           np.int32)
-            self.tables[L][b] = ids
-            rows[L] = ids
+            rows[L] = self.alloc_pages(L, npp)
+            self.tables[L][b] = rows[L]
         return rows
 
     def free_slot(self, b: int) -> None:
-        """Return slot ``b``'s pages to the free lists; its table row goes
-        back to the junk page."""
+        """Drop slot ``b``'s reference on each of its pages (a page whose
+        last reference this was returns to the free list); the table row
+        goes back to the junk page."""
         for L in self.classes:
             row = self.tables[L][b]
             live = row[row != self.junk[L]]
-            self.free[L].extend(int(p) for p in live)
+            self.decref(L, live)
             self.tables[L][b] = self.junk[L]
 
 
@@ -114,11 +156,13 @@ def _walk_slots(cfg: ModelConfig):
 
 
 def init_paged_cache(cfg: ModelConfig, batch: int, cache_len: int,
-                     page_size: int) -> dict:
+                     page_size: int, extra_seqs: int = 0) -> dict:
     """Paged analogue of ``transformer.init_cache``: attention slots get
     {"pk", "pv": (stack, P, page, KV, hd) pools, "pt": (stack, B, n_pp)
-    tables} (tables start at the junk page); recurrent slots keep their
-    dense per-row state."""
+    tables} (tables start at the junk page, id ``P - 1``); recurrent
+    slots keep their dense per-row state.  ``extra_seqs`` adds that many
+    sequences' worth of pool headroom per class for the prefix cache and
+    copy-on-write duplicates (must match the PageAllocator's)."""
     classes = page_classes(cfg, cache_len, page_size)
     cache: dict[str, Any] = {}
     for gkey, skey, kind, n in _walk_slots(cfg):
@@ -127,10 +171,10 @@ def init_paged_cache(cfg: ModelConfig, batch: int, cache_len: int,
         if kind in ATTN_KINDS:
             L = cfg.kv_cache_len(kind, cache_len)
             npp = classes[L]
-            P = batch * npp + 1
+            P = (batch + extra_seqs) * npp + 1
             pool = jnp.zeros(stack + (P, page_size, cfg.n_kv_heads, cfg.hd),
                              cfg.dtype)
-            pt = jnp.full(stack + (batch, npp), batch * npp, jnp.int32)
+            pt = jnp.full(stack + (batch, npp), P - 1, jnp.int32)
             slots[skey] = {"pk": pool, "pv": pool, "pt": pt}
         elif kind == "rwkv6":
             slots[skey] = rwkv_mod.init_rwkv_state(cfg, batch, stack)
@@ -195,11 +239,74 @@ def make_evict_fn(cfg: ModelConfig, cache_len: int,
             if kind in ATTN_KINDS:
                 L = cfg.kv_cache_len(kind, cache_len)
                 npp = classes[L]
-                batch = pc["pt"].shape[1]
-                junk_row = jnp.full((npp,), batch * npp, jnp.int32)
+                junk = pc["pk"].shape[1] - 1      # junk page id is P - 1
+                junk_row = jnp.full((npp,), junk, jnp.int32)
                 slots[skey] = {**pc, "pt": pc["pt"].at[:, b].set(junk_row)}
             else:
                 slots[skey] = pc
         return new
 
     return evict
+
+
+def make_activate_fn(cfg: ModelConfig, cache_len: int,
+                     page_size: int) -> Callable:
+    """Build ``activate(cache, b, rows, carry) -> cache``: flip a slot
+    from prefilling to live.  Sets slot ``b``'s page-table rows to its
+    physical pages (``rows``: {L: (n_pp,) int32}) and writes the chunked
+    prefill's recurrent carry (``transformer.init_chunk_carry`` pytree,
+    B=1) into the dense recurrent rows.  Until this runs, the slot's
+    tables sit on the junk page and its recurrent rows are dead, so the
+    interleaved decode steps of other slots can't corrupt an in-flight
+    prefill."""
+
+    def activate(cache: dict, b: jnp.ndarray, rows: dict,
+                 carry: dict) -> dict:
+        new = {}
+        for gkey, skey, kind, n in _walk_slots(cfg):
+            slots = new.setdefault(gkey, {})
+            pc = cache[gkey][skey]
+            if kind in ATTN_KINDS:
+                L = cfg.kv_cache_len(kind, cache_len)
+                slots[skey] = {**pc, "pt": pc["pt"].at[:, b].set(rows[L])}
+            elif kind in ("rwkv6", "rglru"):
+                car = carry[gkey][skey]
+                slots[skey] = jax.tree.map(
+                    lambda p, d: p.at[:, b].set(d[:, 0].astype(p.dtype)),
+                    pc, car)
+            else:
+                slots[skey] = pc
+        return new
+
+    return activate
+
+
+def make_copy_page_fn(cfg: ModelConfig, cache_len: int,
+                      page_size: int) -> Callable:
+    """Build ``copy_page(cache, src, dst, L, set_pt, b, idx) -> cache``:
+    duplicate physical page ``src`` into ``dst`` across every attention
+    layer of page class ``L`` (``L``/``set_pt`` static for jit).  With
+    ``set_pt`` the slot's page-table entry ``idx`` is repointed at the
+    copy in the same call — the copy-on-write step when a live slot is
+    about to overwrite a page it shares with the prefix cache.  Without
+    it only the pools change (admission-time copy of a partially matched
+    prefix page: the slot's device table is still on the junk page)."""
+
+    def copy_page(cache: dict, src: jnp.ndarray, dst: jnp.ndarray,
+                  L: int, set_pt: bool, b: jnp.ndarray,
+                  idx: jnp.ndarray) -> dict:
+        new = {}
+        for gkey, skey, kind, n in _walk_slots(cfg):
+            slots = new.setdefault(gkey, {})
+            pc = cache[gkey][skey]
+            if kind in ATTN_KINDS and cfg.kv_cache_len(kind, cache_len) == L:
+                pk = pc["pk"].at[:, dst].set(pc["pk"][:, src])
+                pv = pc["pv"].at[:, dst].set(pc["pv"][:, src])
+                pt = pc["pt"].at[:, b, idx].set(dst.astype(jnp.int32)) \
+                    if set_pt else pc["pt"]
+                slots[skey] = {"pk": pk, "pv": pv, "pt": pt}
+            else:
+                slots[skey] = pc
+        return new
+
+    return copy_page

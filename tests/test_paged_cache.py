@@ -180,3 +180,167 @@ class TestPagedDecode:
             got2.append(int(nxt[1]))
         assert got0 == want0[:7]
         assert got2 == want2
+
+
+class TestRefcounts:
+    """Shared-page accounting: a page returns to the free list only when
+    its last owner (slot table or prefix trie) drops it."""
+
+    def test_shared_page_survives_free_slot(self):
+        cfg = get_smoke_config("llama3.2-1b")
+        alloc = PageAllocator(cfg, batch=2, cache_len=CACHE_LEN,
+                              page_size=PAGE, extra_seqs=1)
+        (L, npp), = alloc.classes.items()
+        rows = alloc.alloc(0)
+        shared = int(rows[L][0])
+        alloc.incref(L, shared)              # a second owner (the trie)
+        free_before = alloc.n_free(L)
+        alloc.free_slot(0)
+        # all but the shared page returned
+        assert alloc.n_free(L) == free_before + npp - 1
+        assert shared not in alloc.free[L]
+        alloc.decref(L, shared)              # last owner drops it
+        assert shared in alloc.free[L]
+        assert alloc.refcount[L][shared] == 0
+
+    def test_install_adopted_rows(self):
+        """install() records externally assembled rows (adopted pages +
+        fresh ones) and free_slot() releases exactly one ref each."""
+        cfg = get_smoke_config("llama3.2-1b")
+        alloc = PageAllocator(cfg, batch=2, cache_len=CACHE_LEN,
+                              page_size=PAGE, extra_seqs=1)
+        (L, npp), = alloc.classes.items()
+        donor = alloc.alloc(0)
+        adopted = int(donor[L][0])
+        alloc.incref(L, adopted)             # slot 1's lease on the page
+        fresh = alloc.alloc_pages(L, npp - 1)
+        row = np.concatenate([[adopted], fresh]).astype(np.int32)
+        alloc.install(1, {L: row})
+        with pytest.raises(ValueError, match="already holds"):
+            alloc.install(1, {L: row})
+        assert alloc.refcount[L][adopted] == 2
+        alloc.free_slot(1)
+        assert alloc.refcount[L][adopted] == 1   # donor still owns it
+        assert all(alloc.refcount[L][p] == 0 for p in fresh)
+
+    def test_headroom_capacity(self):
+        cfg = get_smoke_config("llama3.2-1b")
+        alloc = PageAllocator(cfg, batch=2, cache_len=CACHE_LEN,
+                              page_size=PAGE, extra_seqs=2)
+        (L, npp), = alloc.classes.items()
+        alloc.alloc(0)
+        alloc.alloc(1)
+        assert alloc.n_free(L) == 2 * npp    # extra_seqs' worth left over
+
+
+class TestPrefixCacheTrie:
+    """Host-side radix trie over token pages: lookup/insert/lease/evict."""
+
+    def _alloc(self, extra=2):
+        cfg = get_smoke_config("llama3.2-1b")
+        from repro.serve import PrefixCache
+        alloc = PageAllocator(cfg, batch=2, cache_len=CACHE_LEN,
+                              page_size=PAGE, extra_seqs=extra)
+        return alloc, PrefixCache(alloc, PAGE)
+
+    def _publish(self, alloc, trie, prompt, b=0):
+        rows = alloc.alloc(b)
+        path, new_idx = trie.insert(prompt, rows)
+        return rows, path, new_idx
+
+    def test_lookup_full_partial_and_cap(self):
+        alloc, trie = self._alloc()
+        prompt = tuple(range(100, 100 + 24))          # 3 full pages
+        rows, path, new_idx = self._publish(alloc, trie, prompt)
+        assert len(path) == 3 and new_idx == [0, 1, 2]
+        # identical prompt: adoption capped at len-1 -> 2 full + partial 7
+        full, partial = trie.lookup(prompt)
+        assert len(full) == 2 and partial is not None
+        assert partial[1] == PAGE - 1
+        # diverging mid-page-2: 1 full + partial of the matched tokens
+        div = prompt[:12] + (7, 7) + prompt[14:]
+        full, partial = trie.lookup(div)
+        assert len(full) == 1 and partial[1] == 4
+        # diverging in page 0: no full nodes, partial only
+        full, partial = trie.lookup((prompt[0], 9, 9, 9, 9, 9, 9, 9, 1, 2))
+        assert full == [] and partial[1] == 1
+        # disjoint prompt: clean miss
+        full, partial = trie.lookup(tuple(range(500, 524)))
+        assert full == [] and partial is None
+        assert 0.0 < trie.hit_rate < 1.0
+
+    def test_lease_blocks_eviction(self):
+        alloc, trie = self._alloc()
+        (L,) = alloc.classes
+        prompt = tuple(range(16))
+        rows, path, _ = self._publish(alloc, trie, prompt)
+        alloc.free_slot(0)                   # trie is now the only owner
+        full, _ = trie.lookup(prompt + (1, 2, 3))
+        trie.lease(full)
+        trie.evict_for(L, 10 ** 9)           # "evict everything you can"
+        assert trie.n_nodes == 2             # leased path survives
+        trie.release(full)
+        for p in full:                       # drop the lease's page refs
+            alloc.decref(L, p.pages[L])
+        trie.release(path)                   # inserting slot retires
+        trie.evict_for(L, 10 ** 9)
+        assert trie.n_nodes == 0             # now LRU-evictable
+
+    def test_eviction_roundtrip_under_pressure(self):
+        """Keep publishing distinct prompts through a small pool: evict
+        must recycle trie pages so allocation always succeeds, and every
+        page ends the churn exactly once-owned or free."""
+        alloc, trie = self._alloc(extra=1)
+        (L, npp), = alloc.classes.items()
+        for i in range(6):
+            trie.evict_for(L, npp)
+            prompt = tuple(range(i * 50, i * 50 + 16))
+            rows, path, _ = self._publish(alloc, trie, prompt, b=0)
+            trie.release(path)               # slot retires immediately
+            alloc.free_slot(0)
+        assert trie.n_nodes > 0
+        total = (alloc.batch + 1) * npp
+        held = sum(int(alloc.refcount[L][p]) for p in range(total))
+        assert held + alloc.n_free(L) == total
+        assert all(alloc.refcount[L][p] in (0, 1) for p in range(total))
+
+
+class TestChunkedPrefill:
+    @pytest.mark.parametrize("arch", ARCHS)
+    def test_chunks_plus_activate_match_dense(self, arch):
+        """Chunked prefill into junk-tabled pages + activation must
+        decode token-identically to dense whole-prompt prefill + join —
+        across full attention, windowed rings and recurrent carries."""
+        from repro.models.transformer import init_chunk_carry, prefill_chunk
+        from repro.serve import make_activate_fn
+        cfg, params = _model(arch)
+        rng = np.random.default_rng(7)
+        C, S, n_steps = 8, 16, 4
+        prompt = tuple(int(t) for t in rng.integers(0, cfg.vocab_size, S))
+        want = _dense_tokens(cfg, params, prompt, n_steps)
+
+        B = 2
+        alloc = PageAllocator(cfg, B, CACHE_LEN, PAGE)
+        cache = init_paged_cache(cfg, B, CACHE_LEN, PAGE)
+        activate = jax.jit(make_activate_fn(cfg, CACHE_LEN, PAGE))
+        rows = {L: jnp.asarray(ids) for L, ids in alloc.alloc(1).items()}
+        carry = init_chunk_carry(cfg)
+        logits = None
+        for s0 in range(0, S, C):
+            toks = jnp.asarray([prompt[s0:s0 + C]], jnp.int32)
+            logits, cache, carry = prefill_chunk(
+                params, cache, toks, jnp.asarray(s0, jnp.int32), rows,
+                carry, cfg, CACHE_LEN)
+        cache = activate(cache, jnp.asarray(1, jnp.int32), rows, carry)
+        tok = np.zeros((B, 1), np.int32)
+        pos = np.zeros((B,), np.int32)
+        tok[1, 0] = int(jnp.argmax(logits[0]))
+        pos[1] = S
+        got = [int(tok[1, 0])]
+        for _ in range(n_steps):
+            lg, cache = decode_step(params, cache, jnp.asarray(tok),
+                                    jnp.asarray(pos), cfg)
+            tok[1, 0] = int(jnp.argmax(lg[1, -1]))
+            pos[1] += 1
+            got.append(int(tok[1, 0]))
+        assert got == want

@@ -131,3 +131,105 @@ class TestServeWhileTrain:
             assert jnp.array_equal(leaf, want)
         assert all(r.staleness == 0 for r in db.read_log)
         assert is_sequentially_correct(db.telemetry.history, db.n_chunks)
+
+
+def _shared_reqs(cfg, n=10, rate=100.0, seed=3, n_prefixes=3):
+    from repro.serve import shared_prefix_requests
+    return shared_prefix_requests(n, rate, cfg.vocab_size,
+                                  n_prefixes=n_prefixes, prefix_len=16,
+                                  suffix_lens=(4, 8), gen_lens=(2, 4, 8),
+                                  seed=seed)
+
+
+class TestChunkedPrefillAndPrefixCache:
+    def test_chunked_matches_static_oracle(self, model):
+        """Chunked prefill is a pure scheduling change: tokens identical
+        to the whole-prompt static baseline on every request."""
+        cfg, params = model
+        reqs = _shared_reqs(cfg)
+        static = ServeEngine(cfg, params, ServeConfig(
+            continuous=False, **SCFG)).run(reqs)
+        chunked = ServeEngine(cfg, params, ServeConfig(
+            continuous=True, prefill_chunk=8, **SCFG)).run(reqs)
+        assert chunked.outputs == static.outputs
+        assert chunked.prefill_chunks > 0
+
+    def test_prefix_cache_matches_oracle_and_saves_chunks(self, model):
+        """Prefix adoption changes *where* K/V come from, never the
+        tokens; shared-prefix traffic must hit and skip prefill work."""
+        cfg, params = model
+        reqs = _shared_reqs(cfg)
+        static = ServeEngine(cfg, params, ServeConfig(
+            continuous=False, **SCFG)).run(reqs)
+        nocache = ServeEngine(cfg, params, ServeConfig(
+            continuous=True, prefill_chunk=8, **SCFG)).run(reqs)
+        cached = ServeEngine(cfg, params, ServeConfig(
+            continuous=True, prefix_cache=True, **SCFG)).run(reqs)
+        assert cached.outputs == static.outputs
+        assert cached.prefix_hit_rate > 0.3
+        assert cached.prefill_chunks < nocache.prefill_chunks
+        assert cached.ttft_p50 <= nocache.ttft_p50
+
+    def test_prefix_cache_staggered_arrivals(self, model):
+        """Sparse arrivals: adoption, COW wraps and trie churn interleave
+        with decode at many offsets; tokens still match the oracle."""
+        cfg, params = model
+        reqs = _shared_reqs(cfg, rate=0.5, seed=5)
+        static = ServeEngine(cfg, params, ServeConfig(
+            continuous=False, **SCFG)).run(reqs)
+        cached = ServeEngine(cfg, params, ServeConfig(
+            continuous=True, prefix_cache=True, **SCFG)).run(reqs)
+        assert cached.outputs == static.outputs
+
+    def test_eviction_under_pressure_stays_correct(self, model):
+        """Minimal pool headroom + more hot prefixes than it can hold:
+        the trie must evict (not crash) and tokens must stay exact."""
+        cfg, params = model
+        reqs = _shared_reqs(cfg, n=12, n_prefixes=6, seed=9)
+        static = ServeEngine(cfg, params, ServeConfig(
+            continuous=False, **SCFG)).run(reqs)
+        cached = ServeEngine(cfg, params, ServeConfig(
+            continuous=True, prefix_cache=True, prefix_seqs=1,
+            **SCFG)).run(reqs)
+        assert cached.outputs == static.outputs
+
+    def test_report_fields(self, model):
+        cfg, params = model
+        rep = ServeEngine(cfg, params, ServeConfig(
+            continuous=True, prefix_cache=True, **SCFG)).run(
+                _shared_reqs(cfg, n=6))
+        assert rep.ttft_p50 >= 0 and rep.ttft_p99 >= rep.ttft_p50
+        assert rep.prefill_chunks >= 0
+        assert 0.0 <= rep.prefix_hit_rate <= 1.0
+        for f in [rep.outputs[r] for r in rep.outputs]:
+            assert len(f) > 0
+
+    def test_config_validation(self):
+        with pytest.raises(ValueError, match="continuous"):
+            ServeConfig(continuous=False, prefill_chunk=8, **SCFG)
+        with pytest.raises(ValueError, match="top_p"):
+            ServeConfig(top_p=0.0, **SCFG)
+        # prefix_cache implies a page-sized prefill chunk
+        scfg = ServeConfig(prefix_cache=True, **SCFG)
+        assert scfg.prefill_chunk == SCFG["page_size"]
+
+
+class TestSampling:
+    def test_deterministic_across_schedules(self, model):
+        """Sampling is keyed by (request, token index) only: continuous
+        + prefix-cached and static schedules draw identical tokens."""
+        cfg, params = model
+        reqs = _shared_reqs(cfg)
+        kw = dict(temperature=0.8, top_p=0.9, sample_seed=7)
+        a = ServeEngine(cfg, params, ServeConfig(
+            continuous=True, prefix_cache=True, **kw, **SCFG)).run(reqs)
+        b = ServeEngine(cfg, params, ServeConfig(
+            continuous=False, **kw, **SCFG)).run(reqs)
+        greedy = ServeEngine(cfg, params, ServeConfig(
+            continuous=False, **SCFG)).run(reqs)
+        assert a.outputs == b.outputs
+        assert a.outputs != greedy.outputs       # it actually sampled
+        c = ServeEngine(cfg, params, ServeConfig(
+            continuous=False, temperature=0.8, top_p=0.9, sample_seed=8,
+            **SCFG)).run(reqs)
+        assert c.outputs != b.outputs            # seed matters
