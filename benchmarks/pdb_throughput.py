@@ -1,16 +1,21 @@
 """Throughput of the unified ParameterDB layer: dc vs bsp (vs ssp/hogwild).
 
-Two measurements through the *same* code path (``repro.pdb``):
+Three measurements through the *same* code path (``repro.pdb``):
 
   * threaded backend — real threads training the Sec-6 linear-regression
     workload against :class:`repro.pdb.ThreadedParameterDB`; reports wall
     time, DB ops/sec and end-to-end iterations/sec per policy;
+  * sharded server backend — the same workload against real shard
+    processes (``repro.pdb.server``): socket RPC, client caches, clock
+    gossip; ``serverSxW/<policy>`` rows measure distributed throughput;
   * discrete-event simulator — makespan at scale (no GIL artifacts),
     reporting the paper's improvement-% headline through the shared
     policy engine.
 
 Usage:
   PYTHONPATH=src python -m benchmarks.pdb_throughput [--quick]
+  PYTHONPATH=src python -m benchmarks.pdb_throughput --backend server
+      # distributed axis only (live shard cluster)
 
 Prints ``name,us_per_call,derived`` CSV rows like benchmarks/run.py:
 'us_per_call' is wall time per DB op, 'derived' the throughput metric.
@@ -52,6 +57,34 @@ def bench_threaded(n_workers: int = 4, n_iters: int = 60,
     return rows
 
 
+def bench_server(n_shards: int = 2, n_workers: int = 4, n_iters: int = 20,
+                 n_features: int = 960, n_examples: int = 2000,
+                 repeats: int = 2) -> list[tuple[str, float, float]]:
+    """(name, us_per_db_op, iters_per_sec) per policy against a live
+    shard cluster — the distributed-throughput axis.  Op count matches
+    the threaded bench (p*(p+1) DB ops per iteration), so us/op is
+    directly comparable: the difference is pure RPC + process cost, less
+    whatever the client cache absorbs."""
+    from repro.pdb.server import run_distributed_lr
+
+    X, y = T.make_synthetic_lr(n_examples, n_features, seed=0)
+    task = T.LRTask(X, y, n_iters=n_iters, mode="gd")
+    ops_total = n_workers * n_iters * (n_workers + 1)
+    rows = []
+    for policy in POLICIES:
+        delta = 2 if policy == "ssp" else 0
+        walls = []
+        for _ in range(repeats):
+            res = run_distributed_lr(task, n_workers, n_shards=n_shards,
+                                     policy=policy, delta=delta,
+                                     record_history=False)
+            walls.append(res.wall_time)
+        wall = min(walls)
+        rows.append((f"server{n_shards}x{n_workers}/{policy}",
+                     wall / ops_total * 1e6, n_iters / wall))
+    return rows
+
+
 def bench_simulated(n_workers: int = 32, n_iters: int = 50
                     ) -> list[tuple[str, float, float]]:
     """(name, makespan_ms, simulated_iters_per_sec) per policy at a worker
@@ -72,22 +105,38 @@ def main() -> None:
     apply_tuning()
     quick = "--quick" in sys.argv
     print("name,us_per_call,derived")
+    if "--backend" in sys.argv:
+        which = sys.argv[sys.argv.index("--backend") + 1]
+        if which != "server":
+            raise SystemExit(f"unknown --backend {which!r} (only 'server')")
+        for name, us, thru in bench_server(n_iters=10 if quick else 20,
+                                           repeats=1 if quick else 2):
+            print(f"{name},{us:.2f},{thru:.2f}")
+        return
     t_rows = bench_threaded(n_iters=20 if quick else 60,
                             repeats=1 if quick else 3)
     for name, us, thru in t_rows:
+        print(f"{name},{us:.2f},{thru:.2f}")
+    v_rows = bench_server(n_iters=10 if quick else 20,
+                          repeats=1 if quick else 2)
+    for name, us, thru in v_rows:
         print(f"{name},{us:.2f},{thru:.2f}")
     s_rows = bench_simulated(n_iters=20 if quick else 50)
     for name, ms, thru in s_rows:
         print(f"{name},{ms:.2f},{thru:.2f}")
     if "--json" in sys.argv:
         from . import artifacts
-        artifacts.write_bench_json(artifacts.PDB_JSON, t_rows + s_rows)
+        artifacts.write_bench_json(artifacts.PDB_JSON,
+                                   t_rows + v_rows + s_rows)
         print(f"# wrote {artifacts.PDB_JSON}", file=sys.stderr)
 
-    by = {n: d for n, _, d in t_rows + s_rows}
+    by = {n: d for n, _, d in t_rows + v_rows + s_rows}
     dc, bsp = by["threaded/dc"], by["threaded/bsp"]
     print(f"# threaded dc vs bsp: {(dc - bsp) / bsp * 100:+.1f}% iters/sec",
           file=sys.stderr)
+    dc_v, bsp_v = by["server2x4/dc"], by["server2x4/bsp"]
+    print(f"# server(2x4) dc vs bsp: {(dc_v - bsp_v) / bsp_v * 100:+.1f}% "
+          f"iters/sec", file=sys.stderr)
     dc_s, bsp_s = by["simulated32/dc"], by["simulated32/bsp"]
     print(f"# simulated(32) dc vs bsp: {(dc_s - bsp_s) / bsp_s * 100:+.1f}% "
           f"iters/sec", file=sys.stderr)

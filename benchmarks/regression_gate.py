@@ -67,7 +67,9 @@ def main() -> int:
         from . import pdb_throughput
         suites.append(("pdb", artifacts.PDB_JSON,
                        lambda: pdb_throughput.bench_threaded(
-                           n_iters=20, repeats=2)))
+                           n_iters=20, repeats=2)
+                       + pdb_throughput.bench_server(
+                           n_iters=10, repeats=1)))
     else:
         print(f"# no baseline {artifacts.PDB_JSON}; skipping",
               file=sys.stderr)

@@ -219,13 +219,41 @@ def is_strictly_sequential(h: History, n_workers: int) -> bool:
     return True
 
 
+def chunk_projection(h: History, chunk: int) -> list[Op]:
+    """The sub-history of ops touching one partition — the unit on which
+    the Theorem-5 conditions (and the sharded backend's per-shard
+    histories) are defined."""
+    return [op for op in h if op.chunk == chunk]
+
+
+def is_order_preserving_merge(merged: History,
+                              parts: Sequence[History]) -> bool:
+    """True iff every ``part`` appears as a subsequence of ``merged`` and
+    ``merged`` contains exactly the ops of the parts — the invariant the
+    distributed history merge must maintain (each shard's local order is
+    authoritative for the chunks it owns)."""
+    if len(merged) != sum(len(p) for p in parts):
+        return False
+    for part in parts:
+        it = iter(merged)
+        if not all(any(op == m for m in it) for op in part):
+            return False
+    return True
+
+
 def is_sequentially_correct(h: History, n_workers: int) -> bool:
     """Per-partition conditions from the proof of Theorem 5:
     projecting the history onto any single partition gives (1) no
     inter-iteration interleaving, (2) reads-before-write within an iteration,
-    (3) consecutive iterations."""
-    for chunk in range(n_workers):
-        proj = [op for op in h if op.chunk == chunk]
+    (3) consecutive iterations.
+
+    ``n_workers`` bounds the default chunk range; histories with more
+    chunks than workers (e.g. the distributed train path, where one logical
+    worker owns many chunks) are handled by projecting every chunk id that
+    actually appears."""
+    chunks = set(range(n_workers)) | {op.chunk for op in h}
+    for chunk in sorted(chunks):
+        proj = chunk_projection(h, chunk)
         cur = 0
         wrote = True  # allows the first iteration to open
         for op in proj:

@@ -5,8 +5,14 @@ config if you have the hardware) with:
   * bsp vs datacentric vs ssp parameter layouts (sync mode),
   * delta-staleness via the unified ParameterDB train engine
     (repro.pdb.jax_backend), with Op/staleness telemetry,
+  * a multi-process sharded parameter-server backend (--backend server):
+    the raveled parameter vector is split into --param-chunks chunks,
+    hash-sharded over --shards server processes, and trained by --workers
+    client threads under the same consistency policies (Def-3 partitioned
+    SGD: each worker reads all chunks, updates its own chunk group),
   * atomic checkpointing + auto-resume (--resume),
-  * failure injection drills (--fail-at-step), and
+  * failure injection drills (--fail-at-step; --kill-shard-at-step for a
+    parameter-server shard death + snapshot-restart drill), and
   * deterministic data (batch t depends only on (seed, t)).
 
 Examples:
@@ -14,6 +20,8 @@ Examples:
       --steps 50 --ckpt-dir /tmp/ck
   PYTHONPATH=src python -m repro.launch.train --arch rwkv6-1.6b --smoke \
       --steps 50 --delta 2
+  PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b --smoke \
+      --steps 8 --backend server --shards 2 --workers 2 --delta 1
 """
 from __future__ import annotations
 
@@ -32,7 +40,7 @@ from ..models.transformer import model_specs
 from ..optim import OptConfig, make_optimizer
 from ..runtime.fault import FailureInjector, InjectedFailure, RetryPolicy, \
     run_with_recovery
-from .steps import make_train_engine
+from .steps import make_lm_grad_fn, make_train_engine
 from .tuning import apply_tuning
 
 
@@ -50,6 +58,102 @@ def build(args):
                        media_tokens=cfg.n_frontend_tokens,
                        media_dim=cfg.d_frontend, seed=args.seed)
     return cfg, params, opt, sync, spec
+
+
+def run_server_backend(args) -> dict:
+    """Train against the multi-process sharded ParameterDB
+    (:mod:`repro.pdb.server`): parameter-server-style SGD on the raveled
+    parameter vector.  Worker ``k`` reads every chunk (policy-admitted,
+    cache-served when admissible), computes LM grads on its own
+    deterministic batch stream, and writes its owned chunk group — the
+    Def-3 program with one logical worker owning many chunks."""
+    import numpy as np
+    from jax.flatten_util import ravel_pytree
+
+    from ..core.history import is_sequentially_correct
+    from ..pdb.server import ShardCluster
+    from ..runtime.fault import Backoff, ShardDeathPlan
+
+    cfg, params, _opt, sync, spec = build(args)
+    grad_fn = jax.jit(make_lm_grad_fn(cfg, sync))
+    flat, unravel = ravel_pytree(params)
+    theta0 = jax.device_get(flat)
+    p = args.workers
+    m = args.param_chunks if args.param_chunks > 0 else 2 * p
+    bounds = np.linspace(0, theta0.size, m + 1).astype(int)
+    chunks = [theta0[a:b].copy() for a, b in zip(bounds[:-1], bounds[1:])]
+    owned = {k: [c for c in range(m) if c % p == k] for k in range(p)}
+    policy = {"datacentric": "dc", "bsp": "bsp", "ssp": "ssp"}[args.mode]
+
+    plan = None
+    snapshot_dir = args.snapshot_dir or None
+    if args.kill_shard_at_step >= 0:
+        plan = ShardDeathPlan(kill_at_step=args.kill_shard_at_step,
+                              shard=args.shards - 1, restart=True)
+        if snapshot_dir is None:
+            import tempfile
+            snapshot_dir = tempfile.mkdtemp(prefix="pdb-shards-")
+
+    cluster = ShardCluster(chunks, p, args.shards, policy=policy,
+                           delta=args.delta, record=True,
+                           snapshot_dir=snapshot_dir)
+    losses: list[float] = []
+    errors: list[BaseException] = []
+    t0 = time.time()
+
+    def worker(k: int, db) -> None:
+        try:
+            for itr in range(1, args.steps + 1):
+                if k == 0 and plan is not None:
+                    plan.maybe_kill(itr, cluster)
+                theta = np.concatenate(db.read_all(k, itr))
+                pk = unravel(jnp.asarray(theta, dtype=flat.dtype))
+                batch = make_lm_batch(spec, (itr - 1) * p + k)
+                loss, grads = grad_fn(pk, batch)
+                g = jax.device_get(ravel_pytree(grads)[0])
+                for c in owned[k]:
+                    a, b = int(bounds[c]), int(bounds[c + 1])
+                    db.write(k, c, itr, theta[a:b] - args.lr * g[a:b])
+                if k == 0:
+                    losses.append(float(loss))
+                    if (itr - 1) % args.log_every == 0 or itr == args.steps:
+                        print(f"step {itr - 1:5d} loss {float(loss):.4f} "
+                              f"[server] {(time.time() - t0):.1f}s",
+                              flush=True)
+        except BaseException as e:
+            errors.append(e)
+            raise
+
+    import threading
+    with cluster:
+        clients = [cluster.make_client(k, backoff=Backoff(max_retries=12))
+                   for k in range(p)]
+        threads = [threading.Thread(target=worker, args=(k, clients[k]),
+                                    daemon=True) for k in range(p)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        if errors:
+            raise errors[0]
+        pulled = cluster.pull()
+        retries = sum(c.telemetry.stats.retried_steps for c in clients)
+        cache_hits = sum(c.stats["cache_hits"] + c.stats["cache_validated"]
+                         for c in clients)
+        for c in clients:
+            c.close()
+    tele = pulled.summary()
+    tele["retried_steps"] += retries
+    seq_ok = is_sequentially_correct(pulled.history, p)
+    print(f"final loss {losses[-1]:.4f} (first {losses[0]:.4f}) "
+          f"[server: {args.shards} shards x {p} workers, {m} chunks, "
+          f"{tele['reads']}r/{tele['writes']}w "
+          f"max_staleness={tele['max_staleness']:.0f} "
+          f"cache_served={cache_hits} rpc_retries={retries} "
+          f"seq_correct={seq_ok}]")
+    return {"first_loss": losses[0], "final_loss": losses[-1],
+            "telemetry": tele, "sequentially_correct": seq_ok,
+            "rpc_retries": retries}
 
 
 def main(argv=None) -> dict:
@@ -74,8 +178,28 @@ def main(argv=None) -> dict:
     ap.add_argument("--fail-at-step", type=int, default=-1,
                     help="inject a crash (restart drill)")
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--backend", choices=["engine", "server"],
+                    default="engine",
+                    help="engine: in-process ParameterDB train engine; "
+                         "server: multi-process sharded parameter server")
+    ap.add_argument("--shards", type=int, default=2,
+                    help="server backend: number of shard processes")
+    ap.add_argument("--workers", type=int, default=2,
+                    help="server backend: number of client worker threads")
+    ap.add_argument("--param-chunks", type=int, default=0,
+                    help="server backend: chunks the raveled parameter "
+                         "vector is split into (0 = 2*workers)")
+    ap.add_argument("--kill-shard-at-step", type=int, default=-1,
+                    help="server backend: kill+restart the last shard at "
+                         "this step (shard-death drill)")
+    ap.add_argument("--snapshot-dir", default="",
+                    help="server backend: shard snapshot directory "
+                         "(crash-restart survival)")
     args = ap.parse_args(argv)
     apply_tuning()
+
+    if args.backend == "server":
+        return run_server_backend(args)
 
     cfg, params, opt, sync, spec = build(args)
     start = 0

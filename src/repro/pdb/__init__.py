@@ -1,4 +1,4 @@
-"""The parameter database: one consistency layer, three backends.
+"""The parameter database: one consistency layer, four backends.
 
 This package is the repo's single implementation of the paper's
 contribution — a parameter *database* whose read/write admission is decided
@@ -6,13 +6,18 @@ by a pluggable **consistency policy** and whose execution is provided by a
 pluggable **backend**:
 
   policies     — BSP barriers (Alg 2a), Sec-5 RC/WC bit vector, Sec-7.1
-                 delta admissible delay (uniform or per-chunk), SSP
-                 per-worker clocks
+                 delta admissible delay (uniform or per-chunk), SSP and
+                 value-bounded staleness on first-class per-worker
+                 vector clocks
   db           — in-process numpy backend (raises on inadmissible ops) and
                  blocking-threaded backend (one condition variable)
+  server       — multi-process sharded backend: chunks hash-sharded over
+                 TCP shard servers, worker-side ClientParameterDB with a
+                 policy-bounded versioned cache and clock gossip
   jax_backend  — device ring buffer of the last delta+1 parameter versions
                  + the unified TrainEngine used by repro.launch.train
-  telemetry    — shared Op-history recording and staleness statistics
+  telemetry    — shared Op-history recording and staleness statistics;
+                 cross-shard history merge (merge_timed_histories)
 
 Every backend emits the same :class:`repro.core.history.Op` history, so
 ``repro.core.history.is_sequentially_correct`` is the semantic oracle for
@@ -23,11 +28,14 @@ The legacy entry points (``repro.core.scheduler``, ``repro.core.threaded``,
 ``repro.core.staleness``) are thin shims over this package.
 """
 from .db import (InProcessParameterDB, InadmissibleOp, ParameterDB,  # noqa: F401
-                 ThreadedParameterDB, run_interleaved)
+                 ThreadedParameterDB, WaitTimeout, run_interleaved,
+                 stall_diagnostic)
 from .policies import (POLICIES, BSPPolicy, BitVectorPolicy, DeltaPolicy,  # noqa: F401
-                       Policy, SSPPolicy, make_policy, random_schedule,
+                       Policy, SSPPolicy, ValueBoundPolicy, VectorClocks,
+                       make_policy, random_schedule,
                        ssp_clock_bound_violations)
-from .telemetry import StalenessStats, Telemetry  # noqa: F401
+from .telemetry import (StalenessStats, Telemetry, merge_stats,  # noqa: F401
+                        merge_timed_histories)
 
 _JAX_EXPORTS = ("DelayedState", "TrainEngine", "init_delayed_state",
                 "make_delayed_step", "make_engine")

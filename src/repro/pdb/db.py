@@ -33,6 +33,45 @@ class InadmissibleOp(RuntimeError):
     """A non-blocking backend was asked to execute an op its policy rejects."""
 
 
+class WaitTimeout(RuntimeError):
+    """A blocking backend gave up waiting for an op to become admissible.
+
+    Carries the stalled op's coordinates so drivers and tests can tell
+    *which* operation deadlocked, not just that something did.  Raised by
+    :class:`ThreadedParameterDB` and by the RPC timeout path of the
+    distributed client (:mod:`repro.pdb.server.client`) with an identical
+    diagnostic."""
+
+    def __init__(self, kind: str, worker: int, chunk: int, itr: int,
+                 timeout: float | None, policy: Policy, where: str = "",
+                 message: str | None = None):
+        self.kind, self.worker, self.chunk, self.itr = kind, worker, chunk, itr
+        self.timeout = timeout
+        super().__init__(message if message is not None else
+                         stall_diagnostic(kind, worker, chunk, itr,
+                                          timeout, policy, where))
+
+
+def stall_diagnostic(kind: str, worker: int, chunk: int, itr: int,
+                     timeout: float | None, policy: Policy,
+                     where: str = "") -> str:
+    """One formatted line naming the stalled op and the policy state that is
+    blocking it — shared by the threaded backend's condition-variable wait
+    and the distributed client's RPC timeout."""
+    op = f"{kind}{worker}[pi{chunk}][{itr}]"
+    state = ""
+    describe = getattr(policy, "describe", None)
+    if describe is not None:
+        try:
+            state = f"; state: {describe(worker, chunk, itr)}"
+        except Exception:
+            state = ""
+    suffix = f" at {where}" if where else ""
+    return (f"ParameterDB wait timed out after {timeout}s on {op}{suffix} "
+            f"(worker={worker} chunk={chunk} itr={itr}, "
+            f"policy={type(policy).__name__}{state})")
+
+
 class ParameterDB:
     """Shared storage + admission + telemetry; subclasses define waiting."""
 
@@ -114,16 +153,17 @@ class ThreadedParameterDB(ParameterDB):
         self.cond = threading.Condition()
         self.timeout = timeout
 
-    def _wait_for(self, pred: Callable[[], bool], what: str) -> None:
+    def _wait_for(self, pred: Callable[[], bool], kind: str,
+                  worker: int, chunk: int, itr: int) -> None:
         if not self.cond.wait_for(pred, timeout=self.timeout):
-            raise RuntimeError(f"ParameterDB wait timed out on {what} "
-                               f"(policy={type(self.policy).__name__})")
+            raise WaitTimeout(kind, worker, chunk, itr, self.timeout,
+                              self.policy)
 
     def read(self, worker: int, chunk: int, itr: int) -> np.ndarray:
         with self.cond:
             self._wait_for(
                 lambda: self.policy.can_read(worker, chunk, itr),
-                f"r{worker}[pi{chunk}][{itr}]")
+                "r", worker, chunk, itr)
             val = self._do_read(worker, chunk, itr)
             self.cond.notify_all()
             return val
@@ -137,7 +177,7 @@ class ThreadedParameterDB(ParameterDB):
         with self.cond:
             self._wait_for(
                 lambda: self.policy.can_write(worker, chunk, itr),
-                f"w{worker}[pi{chunk}][{itr}]")
+                "w", worker, chunk, itr)
             self._do_write(worker, chunk, itr, value)
             self.cond.notify_all()
 

@@ -1,0 +1,47 @@
+"""The distributed ParameterDB: one consistency layer, many processes.
+
+This package pushes :mod:`repro.pdb.db` across process boundaries while
+keeping its contract intact — same ``read / write / can_read / can_write``
+interface, same pluggable :mod:`policies <repro.pdb.policies>`, same
+Op-history telemetry, same ``is_sequentially_correct`` oracle:
+
+  * :mod:`protocol` — the wire format (length-prefixed JSON header + raw
+    ndarray payload frames) and the Knuth-hash chunk -> shard placement;
+  * :mod:`shard` — one server process owning a subset of the chunks:
+    authoritative chunk-local policy state, blocking admission on a
+    condition variable, Lamport-stamped Op recording, dedup of client
+    retries, optional snapshot/restore for crash survival;
+  * :mod:`client` — the worker-side :class:`ClientParameterDB`: versioned
+    local cache with policy-bounded admissibility, vector-clock gossip
+    that makes BSP barriers and SSP slack exact across shards, and
+    reconnect-with-backoff so a killed-and-restarted shard is survivable;
+  * :mod:`cluster` — spawn/init/kill/restart orchestration plus
+    ``pull()``, which reassembles the global chunk values, the merged
+    Op history and the folded staleness counters from every shard.
+
+The backend split mirrors the in-process one: where
+:class:`~repro.pdb.db.InProcessParameterDB` raises and
+:class:`~repro.pdb.db.ThreadedParameterDB` blocks a thread, a shard blocks
+the *handler* thread of whichever connection issued the op — admission
+semantics are decided by the same policy predicates in all three.
+"""
+from .client import CacheEntry, ClientParameterDB
+from .cluster import (DistributedRunStats, PullResult, ShardCluster,
+                      run_distributed_lr, smoke)
+from .protocol import owned_chunks, shard_of
+from .shard import ShardConfig, ShardServer, ShardState
+
+__all__ = [
+    "CacheEntry",
+    "ClientParameterDB",
+    "DistributedRunStats",
+    "PullResult",
+    "ShardCluster",
+    "ShardConfig",
+    "ShardServer",
+    "ShardState",
+    "owned_chunks",
+    "run_distributed_lr",
+    "shard_of",
+    "smoke",
+]

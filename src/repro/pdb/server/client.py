@@ -1,0 +1,223 @@
+"""Worker-side client of the sharded ParameterDB.
+
+:class:`ClientParameterDB` exposes the exact interface of the in-process
+backends — ``read / write / can_read / can_write / read_all`` plus
+``history``-style telemetry — so the Sec-6 worker loop, the conformance
+suite and the benchmarks run unchanged across process boundaries.
+
+What the client adds over a dumb RPC stub:
+
+  * a **versioned local cache**: a read is served locally when the cached
+    version is admissible under the policy bound
+    (``policy.cache_admissible``, a monotone predicate evaluated against
+    the client's lower-bound clock knowledge — provably conservative).
+    Cache-served reads still notify the owner shard (``notify_read``) so
+    chunk-local admission state, the Op history and staleness telemetry
+    stay authoritative at the shard; what a hit saves is the blocking
+    admission wait and the value payload.  Inadmissible cached versions
+    are *fetched-and-validated*: the shard answers not-modified (no
+    payload) when the cached version is still current — or, under the
+    value-bounded policy, when its accumulated drift is within ``vbound``.
+  * **vector-clock gossip**: every response carries the shard's per-worker
+    clock vectors, merged into the client's mirror policy; every request
+    carries the client's, merged into the shard.  Commit and read-frontier
+    events are additionally broadcast to every shard, which is what makes
+    clock-gated policies (BSP barriers, SSP slack) exact across shards.
+  * **shard-death survival**: every RPC runs under
+    :func:`repro.runtime.fault.retry_with_backoff`; connection resets
+    reconnect with exponential backoff and resend (shards deduplicate by
+    op key, so retries are exactly-once), and each retry is reported into
+    the client's Telemetry so it shows up in the run's staleness summary.
+"""
+from __future__ import annotations
+
+import dataclasses
+import socket
+
+import numpy as np
+
+from ...runtime.fault import Backoff, retry_with_backoff
+from ..db import WaitTimeout
+from ..policies import make_policy
+from ..telemetry import Telemetry
+from . import protocol as P
+
+
+@dataclasses.dataclass
+class CacheEntry:
+    value: np.ndarray
+    version: int
+    cum: float = 0.0        # shard's cumulative-change ledger at fetch time
+
+
+class ClientParameterDB:
+    """One worker's window onto the sharded ParameterDB."""
+
+    def __init__(self, worker: int, addrs: list[tuple[str, int]],
+                 n_workers: int, n_chunks: int,
+                 policy: str = "dc", delta: float | list = 0,
+                 vbound: float | None = None,
+                 timeout: float = 60.0,
+                 backoff: Backoff | None = None):
+        self.worker = worker
+        self.addrs = list(addrs)
+        self.p, self.m = n_workers, n_chunks
+        self.n_shards = len(addrs)
+        # mirror policy: local clock vector + cache-admissibility bounds
+        # (admission itself is decided authoritatively at the shards)
+        self.policy = make_policy(policy, n_workers, delta,
+                                  n_chunks=n_chunks, vbound=vbound)
+        self.timeout = timeout
+        self.backoff = backoff or Backoff()
+        self.telemetry = Telemetry()            # rpc retries -> retried_steps
+        self.cache: dict[int, CacheEntry] = {}
+        self.stats = {"cache_hits": 0, "cache_misses": 0,
+                      "cache_validated": 0, "bytes_saved": 0}
+        self.lamport = 0
+        self._socks: dict[int, socket.socket] = {}
+        self._read_sets: dict[int, set[int]] = {}
+
+    # -- connection management ----------------------------------------------
+    def _sock(self, shard: int) -> socket.socket:
+        sock = self._socks.get(shard)
+        if sock is None:
+            sock = P.connect(self.addrs[shard], timeout=self.timeout + 10.0)
+            self._socks[shard] = sock
+        return sock
+
+    def _drop(self, shard: int) -> None:
+        sock = self._socks.pop(shard, None)
+        if sock is not None:
+            try:
+                sock.close()
+            except OSError:
+                pass
+
+    def close(self) -> None:
+        for s in list(self._socks):
+            self._drop(s)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    # -- the RPC core --------------------------------------------------------
+    def _rpc(self, shard: int, header: dict,
+             payload: bytes = b"") -> tuple[dict, bytes]:
+        def attempt() -> tuple[dict, bytes]:
+            self.lamport += 1
+            header["ts"] = self.lamport
+            header["clocks"] = self.policy.clocks.as_dict()
+            sock = self._sock(shard)
+            try:
+                P.send_msg(sock, header, payload)
+                resp, rp = P.recv_msg(sock)
+            except TimeoutError:
+                # the shard itself answers admission stalls; a silent socket
+                # timeout means a hung/unreachable shard — same diagnostic
+                # as the threaded backend's condition-variable timeout
+                self._drop(shard)
+                raise WaitTimeout(
+                    header.get("op", "?")[:1], header.get("worker", -1),
+                    header.get("chunk", -1), header.get("itr", -1),
+                    self.timeout, self.policy, where=f"shard{shard} (rpc)")
+            except OSError:
+                self._drop(shard)
+                raise
+            if not resp.get("ok"):
+                if resp.get("stall"):
+                    raise WaitTimeout(
+                        header.get("op", "?")[:1], header.get("worker", -1),
+                        header.get("chunk", -1), header.get("itr", -1),
+                        self.timeout, self.policy,
+                        message=resp.get("error"))
+                if resp.get("retryable"):
+                    raise ConnectionResetError(resp.get("error", "retryable"))
+                raise RuntimeError(f"shard{shard}: {resp.get('error')}")
+            clocks = resp.get("clocks")
+            if clocks:
+                self.policy.clocks.merge(clocks["commit"], clocks["frontier"])
+            self.lamport = max(self.lamport, int(resp.get("ts", 0)))
+            return resp, rp
+
+        return retry_with_backoff(
+            attempt, self.backoff, retry_on=(ConnectionError,),
+            telemetry=self.telemetry,
+            describe=f"rpc {header.get('op')} -> shard{shard}")
+
+    def _shard(self, chunk: int) -> int:
+        return P.shard_of(chunk, self.n_shards)
+
+    def _broadcast(self, op: str, itr: int,
+                   exclude: int | None = None) -> None:
+        for s in range(self.n_shards):
+            if s != exclude:
+                self._rpc(s, {"op": op, "worker": self.worker, "itr": itr})
+
+    # -- the ParameterDB interface ------------------------------------------
+    def read(self, worker: int, chunk: int, itr: int) -> np.ndarray:
+        entry = self.cache.get(chunk)
+        if entry is not None and self.policy.cache_admissible(
+                chunk, entry.version, itr):
+            self.stats["cache_hits"] += 1
+            self.stats["bytes_saved"] += entry.value.nbytes
+            self._rpc(self._shard(chunk),
+                      {"op": "notify_read", "worker": worker, "chunk": chunk,
+                       "itr": itr, "version": entry.version})
+            value = entry.value
+        else:
+            req = {"op": "read", "worker": worker, "chunk": chunk, "itr": itr}
+            if entry is not None:
+                req["cached_version"] = entry.version
+                req["cached_cum"] = entry.cum
+            resp, rp = self._rpc(self._shard(chunk), req)
+            if resp["modified"]:
+                value = P.decode_array(resp, rp)
+                self.cache[chunk] = CacheEntry(value, resp["version"],
+                                               resp.get("cum", 0.0))
+                self.stats["cache_misses"] += 1
+            else:
+                value = entry.value       # validated: current, or in vbound
+                self.stats["cache_validated"] += 1
+                self.stats["bytes_saved"] += value.nbytes
+        self.policy.did_read(worker, chunk, itr)
+        self._note_read(worker, chunk, itr)
+        return value.copy()
+
+    def _note_read(self, worker: int, chunk: int, itr: int) -> None:
+        s = self._read_sets.setdefault(itr, set())
+        s.add(chunk)
+        if len(s) == self.m:      # full Def-3 read set done at this itr
+            del self._read_sets[itr]
+            self.policy.observe_frontier(worker, itr)
+            self._broadcast("frontier", itr)
+
+    def read_all(self, worker: int, itr: int) -> list[np.ndarray]:
+        return [self.read(worker, j, itr) for j in range(self.m)]
+
+    def write(self, worker: int, chunk: int, itr: int,
+              value: np.ndarray) -> None:
+        value = np.asarray(value)
+        meta, payload = P.encode_array(value)
+        owner = self._shard(chunk)
+        resp, _ = self._rpc(owner, {"op": "write", "worker": worker,
+                                    "chunk": chunk, "itr": itr, **meta},
+                            payload)
+        self.policy.did_write(worker, chunk, itr)
+        self.cache[chunk] = CacheEntry(value.copy(), resp["version"],
+                                       resp.get("cum", 0.0))
+        self._broadcast("commit", itr, exclude=owner)
+
+    def can_read(self, worker: int, chunk: int, itr: int) -> bool:
+        resp, _ = self._rpc(self._shard(chunk),
+                            {"op": "can", "kind": "r", "worker": worker,
+                             "chunk": chunk, "itr": itr})
+        return bool(resp["admissible"])
+
+    def can_write(self, worker: int, chunk: int, itr: int) -> bool:
+        resp, _ = self._rpc(self._shard(chunk),
+                            {"op": "can", "kind": "w", "worker": worker,
+                             "chunk": chunk, "itr": itr})
+        return bool(resp["admissible"])

@@ -1,0 +1,351 @@
+"""Shard-cluster orchestration: spawn, initialize, kill/restart, collect.
+
+:class:`ShardCluster` turns ``N`` shard server processes plus per-worker
+:class:`~repro.pdb.server.client.ClientParameterDB` instances into one
+logical ParameterDB:
+
+  * ``start()`` spawns the shard processes (``multiprocessing`` *spawn*
+    context — no inherited state), learns their ports over a pipe and
+    pushes each shard its hash-owned slice of the initial chunks;
+  * ``kill_shard`` / ``restart_shard`` are the fault-drill hooks used by
+    :class:`repro.runtime.fault.ShardDeathPlan` — a restart rebinds the
+    *same* port and (with ``snapshot_dir``) restores the shard's persisted
+    state, so clients recover through reconnect-with-backoff alone;
+  * ``pull()`` collects every shard's chunk values, Lamport-stamped Op
+    history and staleness counters and reassembles the global view
+    (``telemetry.merge_timed_histories`` / ``merge_stats``), on which
+    ``repro.core.history.is_sequentially_correct`` is the oracle.
+
+:func:`run_distributed_lr` is the Sec-6 workload on this backend — the
+process-level analogue of :func:`repro.core.threaded.run_parallel`, used
+by the conformance suite and ``benchmarks/pdb_throughput.py``.
+
+CLI::
+
+    python -m repro.pdb.server.cluster --smoke     # 2 shards x 4 workers
+
+runs the conformance smoke CI uses: dc/delta=0 must be bit-identical to
+sequential, and the merged history must be sequentially correct.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import multiprocessing as mp
+import os
+import threading
+import time
+
+import numpy as np
+
+from ...core.history import Op
+from ...runtime.fault import Backoff, retry_with_backoff
+from ..telemetry import StalenessStats, merge_stats, merge_timed_histories, \
+    summarize
+from . import protocol as P
+from . import shard as shard_mod
+from .client import ClientParameterDB
+
+
+@dataclasses.dataclass
+class PullResult:
+    """Global state reassembled from every shard."""
+    values: dict[int, np.ndarray]          # chunk id -> value
+    history: list[Op]                      # merged global Op history
+    per_shard: list[list[tuple[int, Op]]]  # Lamport-stamped, per shard
+    stats: StalenessStats                  # folded staleness counters
+    versions: dict[int, int]
+    cums: dict[int, float]
+
+    def theta(self) -> np.ndarray:
+        return np.concatenate([self.values[c] for c in sorted(self.values)])
+
+    def summary(self) -> dict:
+        return summarize(self.stats)
+
+
+class ShardCluster:
+    """N shard processes + init/teardown + fault drills + state collection."""
+
+    def __init__(self, init_chunks, n_workers: int, n_shards: int = 2,
+                 policy: str = "dc", delta=0, vbound: float | None = None,
+                 record: bool = True, timeout: float = 60.0,
+                 snapshot_dir: str | None = None):
+        self.init_chunks = [np.array(c, copy=True) for c in init_chunks]
+        self.p, self.m = n_workers, len(self.init_chunks)
+        self.n_shards = n_shards
+        self.policy, self.delta, self.vbound = policy, delta, vbound
+        self.record, self.timeout = record, timeout
+        self.snapshot_dir = snapshot_dir
+        self.procs: list[mp.process.BaseProcess | None] = [None] * n_shards
+        self.addrs: list[tuple[str, int]] = [None] * n_shards
+        self._ctx = mp.get_context("spawn")
+        self._started = False
+
+    # -- lifecycle -----------------------------------------------------------
+    def _snapshot_path(self, shard: int) -> str | None:
+        if self.snapshot_dir is None:
+            return None
+        os.makedirs(self.snapshot_dir, exist_ok=True)
+        return os.path.join(self.snapshot_dir, f"shard{shard}.pkl")
+
+    def _spawn(self, shard: int, port: int = 0) -> None:
+        parent, child = self._ctx.Pipe()
+        proc = self._ctx.Process(
+            target=shard_mod._spawn_entry,
+            args=(child, self._snapshot_path(shard), port), daemon=True)
+        proc.start()
+        child.close()
+        if not parent.poll(30.0):
+            proc.kill()
+            raise RuntimeError(f"shard {shard} did not report a port")
+        bound = parent.recv()
+        parent.close()
+        self.procs[shard] = proc
+        self.addrs[shard] = ("127.0.0.1", bound)
+
+    def _admin_rpc(self, shard: int, header: dict,
+                   payload: bytes = b"") -> tuple[dict, bytes]:
+        """One-shot control-plane RPC on a fresh connection, retried across
+        the shard's restart window."""
+        def attempt():
+            sock = P.connect(self.addrs[shard], timeout=self.timeout + 10.0)
+            try:
+                P.send_msg(sock, header, payload)
+                resp, rp = P.recv_msg(sock)
+            finally:
+                sock.close()
+            if not resp.get("ok") and resp.get("retryable"):
+                raise ConnectionResetError(resp.get("error", "retryable"))
+            if not resp.get("ok"):
+                raise RuntimeError(f"shard{shard}: {resp.get('error')}")
+            return resp, rp
+
+        return retry_with_backoff(attempt, Backoff(),
+                                  describe=f"admin {header.get('op')} "
+                                           f"-> shard{shard}")
+
+    def _init_shard(self, shard: int) -> None:
+        cfg = shard_mod.ShardConfig(
+            shard_id=shard, n_shards=self.n_shards, n_workers=self.p,
+            n_chunks=self.m, policy=self.policy, delta=self.delta,
+            vbound=self.vbound, timeout=self.timeout, record=self.record)
+        owned = {c: self.init_chunks[c]
+                 for c in P.owned_chunks(shard, self.m, self.n_shards)}
+        manifest, payload = P.pack_arrays(owned)
+        self._admin_rpc(shard, {"op": "init", "config": cfg.to_header(),
+                                "manifest": manifest}, payload)
+
+    def start(self) -> "ShardCluster":
+        for s in range(self.n_shards):
+            self._spawn(s)
+        for s in range(self.n_shards):
+            self._init_shard(s)
+        self._started = True
+        return self
+
+    def __enter__(self) -> "ShardCluster":
+        return self.start() if not self._started else self
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown()
+
+    def shutdown(self) -> None:
+        for s, proc in enumerate(self.procs):
+            if proc is None or not proc.is_alive():
+                continue
+            try:
+                self._admin_rpc(s, {"op": "shutdown"})
+            except Exception:
+                pass
+            proc.join(timeout=5.0)
+            if proc.is_alive():
+                proc.kill()
+                proc.join(timeout=5.0)
+        self._started = False
+
+    # -- fault drills (driven by runtime.fault.ShardDeathPlan) ---------------
+    def kill_shard(self, shard: int) -> None:
+        proc = self.procs[shard]
+        if proc is not None and proc.is_alive():
+            proc.kill()
+            proc.join(timeout=10.0)
+        self.procs[shard] = None
+
+    def restart_shard(self, shard: int) -> None:
+        """Relaunch a killed shard on its original port.  With a snapshot
+        the shard restores exactly where it died; without one it is
+        re-initialized from the cluster's initial chunks (progress on that
+        shard is lost — fine for drills, fatal for bit-identity)."""
+        self._spawn(shard, port=self.addrs[shard][1])
+        resp, _ = self._admin_rpc(shard, {"op": "ping"})
+        if not resp.get("initialized"):
+            self._init_shard(shard)
+
+    # -- data plane ----------------------------------------------------------
+    def make_client(self, worker: int,
+                    backoff: Backoff | None = None) -> ClientParameterDB:
+        return ClientParameterDB(
+            worker, list(self.addrs), self.p, self.m, policy=self.policy,
+            delta=self.delta, vbound=self.vbound, timeout=self.timeout,
+            backoff=backoff)
+
+    def pull(self) -> PullResult:
+        values: dict[int, np.ndarray] = {}
+        per_shard, stats, versions, cums = [], [], {}, {}
+        for s in range(self.n_shards):
+            resp, payload = self._admin_rpc(s, {"op": "pull"})
+            values.update(P.unpack_arrays(resp["manifest"], payload))
+            per_shard.append([(int(t), Op(k, int(w), int(c), int(a)))
+                              for t, k, w, c, a in resp["history"]])
+            stats.append(StalenessStats(**resp["stats"]))
+            versions.update({int(c): v for c, v in resp["versions"].items()})
+            cums.update({int(c): v for c, v in resp["cums"].items()})
+        return PullResult(values=values,
+                          history=merge_timed_histories(per_shard),
+                          per_shard=per_shard, stats=merge_stats(stats),
+                          versions=versions, cums=cums)
+
+
+# ---------------------------------------------------------------------------
+# The Sec-6 workload on the sharded backend
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class DistributedRunStats:
+    theta: np.ndarray
+    wall_time: float
+    history: list[Op]
+    staleness: dict
+    cache: dict                 # summed client cache counters
+    retries: int                # rpc retries across all clients
+
+
+def run_distributed_lr(task, n_workers: int, n_shards: int = 2,
+                       policy: str = "dc", delta=0,
+                       vbound: float | None = None,
+                       record_history: bool = True,
+                       timeout: float = 60.0,
+                       snapshot_dir: str | None = None,
+                       death_plan=None,
+                       backoff: Backoff | None = None
+                       ) -> DistributedRunStats:
+    """Train :class:`repro.core.threaded.LRTask` with ``n_workers`` client
+    threads against ``n_shards`` shard processes — the process-level twin of
+    :func:`repro.core.threaded.run_parallel` (same chunking, same pre-drawn
+    sample schedule, so dc/delta=0 stays bit-identical to sequential).
+
+    ``death_plan`` (a :class:`repro.runtime.fault.ShardDeathPlan`) injects a
+    shard kill at a chosen iteration, fired by worker 0 — pair it with
+    ``snapshot_dir`` so the restarted shard resumes where it died."""
+    from ...core.threaded import chunk_slices, chunk_update
+
+    d = task.X.shape[1]
+    slices = chunk_slices(d, n_workers)
+    schedule = task.sample_schedule()
+    init = [np.zeros(sl.stop - sl.start) for sl in slices]
+
+    cluster = ShardCluster(init, n_workers, n_shards, policy=policy,
+                           delta=delta, vbound=vbound, record=record_history,
+                           timeout=timeout, snapshot_dir=snapshot_dir)
+    errors: list[BaseException] = []
+    clients: list[ClientParameterDB] = []
+
+    def worker(i: int, db: ClientParameterDB) -> None:
+        try:
+            for itr in range(1, task.n_iters + 1):
+                if i == 0 and death_plan is not None:
+                    death_plan.maybe_kill(itr, cluster)
+                vals = db.read_all(i, itr)
+                theta = np.concatenate(vals)
+                new = chunk_update(task, theta, slices[i], itr, schedule)
+                db.write(i, i, itr, new)
+        except BaseException as e:
+            errors.append(e)
+            raise
+
+    with cluster:
+        clients = [cluster.make_client(i, backoff=backoff)
+                   for i in range(n_workers)]
+        threads = [threading.Thread(target=worker, args=(i, clients[i]),
+                                    daemon=True)
+                   for i in range(n_workers)]
+        t0 = time.perf_counter()
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=timeout * task.n_iters)
+        wall = time.perf_counter() - t0
+        if errors:
+            raise errors[0]
+        if any(t.is_alive() for t in threads):
+            raise RuntimeError("distributed workers did not terminate "
+                               "(deadlock?)")
+        pulled = cluster.pull()
+        cache = {"cache_hits": 0, "cache_misses": 0,
+                 "cache_validated": 0, "bytes_saved": 0}
+        retries = 0
+        for c in clients:
+            for k in cache:
+                cache[k] += c.stats[k]
+            retries += c.telemetry.stats.retried_steps
+            c.close()
+    # shard stats can't see client-side reconnects; fold them in so one
+    # summary describes the run's synchronization *and* fault behavior
+    staleness = pulled.summary()
+    staleness["retried_steps"] += retries
+    return DistributedRunStats(theta=pulled.theta(), wall_time=wall,
+                               history=pulled.history,
+                               staleness=staleness,
+                               cache=cache, retries=retries)
+
+
+# ---------------------------------------------------------------------------
+# CLI / CI smoke
+# ---------------------------------------------------------------------------
+
+def smoke(n_shards: int = 2, n_workers: int = 4, n_iters: int = 8,
+          verbose: bool = True) -> bool:
+    """The tier-2 CI check: dc/delta=0 on a live shard cluster must be
+    bit-identical to sequential, with a sequentially-correct merged
+    history.  Returns True on success."""
+    from ...core.history import is_sequentially_correct
+    from ...core.threaded import LRTask, make_synthetic_lr, run_sequential
+
+    X, y = make_synthetic_lr(200, 24, seed=0)
+    task = LRTask(X, y, n_iters=n_iters, mode="gd")
+    expect = run_sequential(task, n_workers)
+    res = run_distributed_lr(task, n_workers, n_shards, policy="dc", delta=0)
+    identical = bool(np.array_equal(res.theta, expect))
+    correct = is_sequentially_correct(res.history, n_workers)
+    if verbose:
+        print(f"shards={n_shards} workers={n_workers} iters={n_iters} "
+              f"policy=dc delta=0")
+        print(f"  bit-identical to sequential: {identical}")
+        print(f"  merged history sequentially correct: {correct} "
+              f"({len(res.history)} ops)")
+        print(f"  staleness: {res.staleness}")
+        print(f"  cache: {res.cache}  rpc retries: {res.retries}")
+    return identical and correct
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="distributed ParameterDB cluster driver")
+    ap.add_argument("--smoke", action="store_true",
+                    help="run the conformance smoke and exit nonzero on "
+                         "failure")
+    ap.add_argument("--shards", type=int, default=2)
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--iters", type=int, default=8)
+    args = ap.parse_args(argv)
+    if args.smoke:
+        ok = smoke(args.shards, args.workers, args.iters)
+        print("SMOKE PASS" if ok else "SMOKE FAIL")
+        return 0 if ok else 1
+    ap.print_help()
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,121 @@
+"""Wire protocol of the sharded parameter server: length-prefixed frames.
+
+Every message (request or response) is one frame:
+
+    u32_be header_len | header (UTF-8 JSON) | u32_be payload_len | payload
+
+The JSON header carries the op type, coordinates, clock vectors and array
+metadata; the payload carries raw ``ndarray`` bytes (C-order) when a chunk
+value travels, else is empty.  Requests and responses alternate strictly on
+a connection (every request gets exactly one response), so one worker's
+socket needs no request ids — FIFO matching is the protocol.
+
+Header fields by op (all requests also carry ``ts`` — the sender's Lamport
+clock — and may carry ``clocks``: ``{"commit": [...], "frontier": [...]}``):
+
+  ``read``         worker, chunk, itr, cached_version?, cached_cum?
+  ``notify_read``  worker, chunk, itr, version   (a cache-served read)
+  ``write``        worker, chunk, itr + array payload
+  ``commit``       worker, itr                   (commit-clock broadcast)
+  ``frontier``     worker, itr                   (read-frontier broadcast)
+  ``can``          kind ('r'|'w'), worker, chunk, itr
+  ``init``         config + packed chunk arrays
+  ``ping`` / ``pull`` / ``shutdown``
+
+Responses: ``{"ok": true, ...}`` or ``{"ok": false, "error": str,
+"stall": bool}`` — ``stall`` marks an admission-wait timeout, which the
+client re-raises as :class:`repro.pdb.db.WaitTimeout` with the shard's
+diagnostic intact.
+
+Chunk placement is by hash: ``shard_of(chunk, S)`` mixes the chunk id with
+a Knuth multiplicative hash before reducing mod S, so consecutive chunks
+spread across shards (not a contiguous range partition).
+"""
+from __future__ import annotations
+
+import json
+import socket
+import struct
+
+import numpy as np
+
+_LEN = struct.Struct("!I")
+MAX_FRAME = 1 << 30          # sanity bound: refuse absurd frames
+
+# A multiplicative hash (Knuth's 2^32 / phi) rather than `chunk % S`, so
+# chunk->shard placement is scattered and independent of chunk ordering.
+_KNUTH = 2654435761
+
+
+def shard_of(chunk: int, n_shards: int) -> int:
+    return ((chunk * _KNUTH) & 0xFFFFFFFF) % n_shards
+
+
+def owned_chunks(shard: int, n_chunks: int, n_shards: int) -> list[int]:
+    return [c for c in range(n_chunks) if shard_of(c, n_shards) == shard]
+
+
+def _recv_exact(sock: socket.socket, n: int) -> bytes:
+    buf = bytearray()
+    while len(buf) < n:
+        part = sock.recv(n - len(buf))
+        if not part:
+            raise ConnectionResetError("peer closed mid-frame")
+        buf += part
+    return bytes(buf)
+
+
+def send_msg(sock: socket.socket, header: dict, payload: bytes = b"") -> None:
+    hb = json.dumps(header, separators=(",", ":")).encode()
+    sock.sendall(_LEN.pack(len(hb)) + hb + _LEN.pack(len(payload)) + payload)
+
+
+def recv_msg(sock: socket.socket) -> tuple[dict, bytes]:
+    (hlen,) = _LEN.unpack(_recv_exact(sock, 4))
+    if hlen > MAX_FRAME:
+        raise ConnectionError(f"oversized header ({hlen} bytes)")
+    header = json.loads(_recv_exact(sock, hlen).decode())
+    (plen,) = _LEN.unpack(_recv_exact(sock, 4))
+    if plen > MAX_FRAME:
+        raise ConnectionError(f"oversized payload ({plen} bytes)")
+    payload = _recv_exact(sock, plen) if plen else b""
+    return header, payload
+
+
+def encode_array(arr: np.ndarray) -> tuple[dict, bytes]:
+    arr = np.ascontiguousarray(arr)
+    return ({"dtype": arr.dtype.str, "shape": list(arr.shape)},
+            arr.tobytes())
+
+
+def decode_array(meta: dict, payload: bytes) -> np.ndarray:
+    return np.frombuffer(payload, dtype=np.dtype(meta["dtype"])).reshape(
+        meta["shape"]).copy()
+
+
+def pack_arrays(arrays: dict[int, np.ndarray]) -> tuple[list, bytes]:
+    """Pack several chunk arrays into one payload: returns (manifest, bytes)
+    where manifest rows are [chunk_id, dtype, shape, offset, nbytes]."""
+    manifest, parts, off = [], [], 0
+    for cid in sorted(arrays):
+        a = np.ascontiguousarray(arrays[cid])
+        b = a.tobytes()
+        manifest.append([cid, a.dtype.str, list(a.shape), off, len(b)])
+        parts.append(b)
+        off += len(b)
+    return manifest, b"".join(parts)
+
+
+def unpack_arrays(manifest: list, payload: bytes) -> dict[int, np.ndarray]:
+    out = {}
+    for cid, dtype, shape, off, nbytes in manifest:
+        out[int(cid)] = np.frombuffer(
+            payload[off:off + nbytes],
+            dtype=np.dtype(dtype)).reshape(shape).copy()
+    return out
+
+
+def connect(addr: tuple[str, int], timeout: float | None) -> socket.socket:
+    sock = socket.create_connection(addr, timeout=timeout)
+    sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+    return sock

@@ -1,0 +1,351 @@
+"""One shard of the distributed ParameterDB: a TCP server process owning a
+hash-assigned subset of the chunks.
+
+A shard is the blocking-threaded backend of :mod:`repro.pdb.db` pushed
+across a process boundary: each client connection gets a handler thread,
+admission blocks on one shared condition variable, and every completed op
+is recorded through the same :class:`repro.pdb.telemetry.Telemetry` —
+stamped with the shard's Lamport clock so per-shard histories merge into
+one global history (``telemetry.merge_timed_histories``).
+
+Chunk-local policy state (bit vectors, versions, last-read arrays) lives
+here authoritatively; cross-shard admission state arrives as per-worker
+clock broadcasts (``commit`` / ``frontier`` messages) that the policy
+merges via ``observe_commit`` / ``observe_frontier``.  All admission
+predicates are monotone in that state, so a shard can never admit an op
+the global truth would reject — it can only wait longer.
+
+Retries are safe: every state-mutating message is keyed by
+``(kind, worker, chunk, itr)`` and deduplicated, so a client that resends
+after a connection reset (shard death drill, ``runtime.fault.Backoff``)
+gets at-least-once delivery with exactly-once recording.  With
+``--snapshot`` the shard persists its state (chunks, policy, dedup set,
+telemetry, Lamport clock) after each mutation and restores it on boot —
+a killed-and-restarted shard resumes where it died.
+
+Run standalone:  ``python -m repro.pdb.server.shard --port 7070``
+(then initialize it with an ``init`` message — see ``cluster.py``).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import pickle
+import socketserver
+import threading
+
+import numpy as np
+
+from ..db import stall_diagnostic
+from ..policies import make_policy
+from ..telemetry import Telemetry
+from . import protocol as P
+
+
+@dataclasses.dataclass
+class ShardConfig:
+    shard_id: int
+    n_shards: int
+    n_workers: int
+    n_chunks: int
+    policy: str = "dc"
+    delta: float | list = 0
+    vbound: float | None = None
+    timeout: float = 60.0
+    record: bool = True
+    snapshot_path: str | None = None
+
+    def to_header(self) -> dict:
+        d = dataclasses.asdict(self)
+        d.pop("snapshot_path")
+        return d
+
+
+class ShardState:
+    """Storage + policy + telemetry for the chunks this shard owns."""
+
+    def __init__(self, cfg: ShardConfig, chunks: dict[int, np.ndarray]):
+        self.cfg = cfg
+        self.chunks = {int(c): np.array(v, copy=True)
+                       for c, v in chunks.items()}
+        self.policy = make_policy(cfg.policy, cfg.n_workers, cfg.delta,
+                                  n_chunks=cfg.n_chunks, vbound=cfg.vbound)
+        self.telemetry = Telemetry(record_history=cfg.record)
+        self.version = {c: 0 for c in self.chunks}
+        self.cum_change = {c: 0.0 for c in self.chunks}   # vap ledger (L-inf)
+        self.seen: set[tuple] = set()
+        self.lamport = 0
+        self.cond = threading.Condition()
+
+    # -- persistence (shard-death survival) ---------------------------------
+    def snapshot(self) -> None:
+        """Atomically persist state; called under the condition lock after
+        every mutation when a snapshot path is configured."""
+        path = self.cfg.snapshot_path
+        if not path:
+            return
+        blob = pickle.dumps({
+            "cfg": self.cfg, "chunks": self.chunks, "policy": self.policy,
+            "version": self.version, "cum_change": self.cum_change,
+            "seen": self.seen, "lamport": self.lamport,
+            "telemetry": self.telemetry})
+        tmp = path + ".tmp"
+        with open(tmp, "wb") as f:
+            f.write(blob)
+        os.replace(tmp, path)
+
+    @classmethod
+    def restore(cls, path: str) -> "ShardState":
+        with open(path, "rb") as f:
+            d = pickle.load(f)
+        self = cls.__new__(cls)
+        self.cfg = d["cfg"]
+        self.chunks, self.policy = d["chunks"], d["policy"]
+        self.version, self.cum_change = d["version"], d["cum_change"]
+        self.seen, self.lamport = d["seen"], d["lamport"]
+        self.telemetry = d["telemetry"]
+        self.cond = threading.Condition()
+        return self
+
+    # -- helpers (call under self.cond) -------------------------------------
+    def _tick(self, ts) -> int:
+        self.lamport = max(self.lamport, int(ts or 0)) + 1
+        return self.lamport
+
+    def _merge_clocks(self, h: dict) -> None:
+        clocks = h.get("clocks")
+        if clocks:
+            self.policy.clocks.merge(clocks["commit"], clocks["frontier"])
+
+    def _base_resp(self, chunk: int | None = None) -> dict:
+        resp = {"ok": True, "clocks": self.policy.clocks.as_dict(),
+                "ts": self.lamport}
+        if chunk is not None:
+            resp["cum"] = self.cum_change[chunk]
+        return resp
+
+    def _stall(self, kind: str, w: int, c: int, a: int) -> tuple[dict, bytes]:
+        return ({"ok": False, "stall": True,
+                 "error": stall_diagnostic(
+                     kind, w, c, a, self.cfg.timeout, self.policy,
+                     where=f"shard{self.cfg.shard_id}")}, b"")
+
+    # -- message handlers ----------------------------------------------------
+    def read(self, h: dict) -> tuple[dict, bytes]:
+        w, c, a = h["worker"], h["chunk"], h["itr"]
+        key = ("r", w, c, a)
+        with self.cond:
+            self._merge_clocks(h)
+            ts = self._tick(h.get("ts"))
+            admissible = self.cond.wait_for(
+                lambda: key in self.seen or self.policy.can_read(w, c, a),
+                timeout=self.cfg.timeout)
+            if not admissible:
+                return self._stall("r", w, c, a)
+            ver, cum = self.version[c], self.cum_change[c]
+            if key in self.seen:          # crash retry: serve, don't re-record
+                served, modified = ver, True
+            else:
+                cached_ver = h.get("cached_version")
+                cached_cum = h.get("cached_cum")
+                vb = self.cfg.vbound
+                if cached_ver is not None and cached_ver == ver:
+                    served, modified = ver, False        # cache validated
+                elif (cached_ver is not None and vb is not None
+                      and cached_cum is not None and cum - cached_cum <= vb):
+                    served, modified = cached_ver, False  # within value bound
+                else:
+                    served, modified = ver, True
+                self.policy.did_read(w, c, a)
+                self.telemetry.on_read(w, c, a, version=served, lamport=ts)
+                self.seen.add(key)
+                self.snapshot()
+                self.cond.notify_all()
+            resp = self._base_resp(c)
+            resp.update(version=served, modified=modified)
+            if modified:
+                meta, payload = P.encode_array(self.chunks[c])
+                resp.update(meta)
+                return resp, payload
+            return resp, b""
+
+    def notify_read(self, h: dict) -> tuple[dict, bytes]:
+        """A read the client served from its local cache: record it (bits,
+        last-read arrays, history, staleness at the *observed* version)."""
+        w, c, a = h["worker"], h["chunk"], h["itr"]
+        key = ("r", w, c, a)
+        with self.cond:
+            self._merge_clocks(h)
+            ts = self._tick(h.get("ts"))
+            if key not in self.seen:
+                self.policy.did_read(w, c, a)
+                self.telemetry.on_read(w, c, a, version=h.get("version"),
+                                       lamport=ts)
+                self.seen.add(key)
+                self.snapshot()
+                self.cond.notify_all()
+            return self._base_resp(c), b""
+
+    def write(self, h: dict, payload: bytes) -> tuple[dict, bytes]:
+        w, c, a = h["worker"], h["chunk"], h["itr"]
+        key = ("w", w, c, a)
+        with self.cond:
+            self._merge_clocks(h)
+            ts = self._tick(h.get("ts"))
+            admissible = self.cond.wait_for(
+                lambda: key in self.seen or self.policy.can_write(w, c, a),
+                timeout=self.cfg.timeout)
+            if not admissible:
+                return self._stall("w", w, c, a)
+            if key not in self.seen:
+                arr = P.decode_array(h, payload)
+                old = self.chunks[c]
+                if old.shape == arr.shape:
+                    diff = np.abs(arr - old)
+                    self.cum_change[c] += float(diff.max()) if diff.size else 0.0
+                self.chunks[c] = arr
+                self.version[c] = max(self.version[c], a)
+                self.policy.did_write(w, c, a)
+                self.telemetry.on_write(w, c, a, lamport=ts)
+                self.seen.add(key)
+                self.snapshot()
+                self.cond.notify_all()
+            resp = self._base_resp(c)
+            resp["version"] = self.version[c]
+            return resp, b""
+
+    def observe(self, h: dict) -> tuple[dict, bytes]:
+        """commit / frontier clock broadcasts."""
+        with self.cond:
+            self._merge_clocks(h)
+            self._tick(h.get("ts"))
+            if h["op"] == "commit":
+                self.policy.observe_commit(h["worker"], h["itr"])
+            else:
+                self.policy.observe_frontier(h["worker"], h["itr"])
+            self.snapshot()
+            self.cond.notify_all()
+            return self._base_resp(), b""
+
+    def can(self, h: dict) -> tuple[dict, bytes]:
+        w, c, a = h["worker"], h["chunk"], h["itr"]
+        with self.cond:
+            pred = (self.policy.can_read if h["kind"] == "r"
+                    else self.policy.can_write)
+            resp = self._base_resp()
+            resp["admissible"] = bool(pred(w, c, a))
+            return resp, b""
+
+    def pull(self, h: dict) -> tuple[dict, bytes]:
+        """Final-state collection: values + Lamport-stamped history + stats."""
+        with self.cond:
+            self._tick(h.get("ts"))
+            manifest, payload = P.pack_arrays(self.chunks)
+            resp = self._base_resp()
+            resp.update(
+                manifest=manifest,
+                history=[[t, op.kind, op.worker, op.chunk, op.itr]
+                         for t, op in self.telemetry.timed_history()],
+                stats=dataclasses.asdict(self.telemetry.stats),
+                versions={str(c): v for c, v in self.version.items()},
+                cums={str(c): v for c, v in self.cum_change.items()})
+            return resp, payload
+
+
+class ShardServer(socketserver.ThreadingTCPServer):
+    allow_reuse_address = True
+    daemon_threads = True
+
+    def __init__(self, addr: tuple[str, int],
+                 snapshot_path: str | None = None):
+        super().__init__(addr, _Handler)
+        self.snapshot_path = snapshot_path
+        self.state: ShardState | None = None
+        if snapshot_path and os.path.exists(snapshot_path):
+            self.state = ShardState.restore(snapshot_path)
+            self.state.cfg.snapshot_path = snapshot_path
+
+    def dispatch(self, h: dict, payload: bytes) -> tuple[dict, bytes]:
+        op = h.get("op")
+        if op == "ping":
+            return {"ok": True, "initialized": self.state is not None}, b""
+        if op == "init":
+            if self.state is None:
+                cfg = ShardConfig(snapshot_path=self.snapshot_path,
+                                  **h["config"])
+                chunks = P.unpack_arrays(h["manifest"], payload)
+                self.state = ShardState(cfg, chunks)
+                self.state.snapshot()
+            return {"ok": True, "chunks": sorted(self.state.chunks)}, b""
+        if op == "shutdown":
+            return {"ok": True}, b""
+        if self.state is None:
+            # mid-restart window: the client treats this as a transient
+            # connection-level failure and retries with backoff
+            return {"ok": False, "retryable": True,
+                    "error": "shard not initialized"}, b""
+        if op == "read":
+            return self.state.read(h)
+        if op == "notify_read":
+            return self.state.notify_read(h)
+        if op == "write":
+            return self.state.write(h, payload)
+        if op in ("commit", "frontier"):
+            return self.state.observe(h)
+        if op == "can":
+            return self.state.can(h)
+        if op == "pull":
+            return self.state.pull(h)
+        return {"ok": False, "error": f"unknown op {op!r}"}, b""
+
+
+class _Handler(socketserver.BaseRequestHandler):
+    def handle(self):
+        sock = self.request
+        while True:
+            try:
+                h, payload = P.recv_msg(sock)
+            except (ConnectionError, OSError):
+                return
+            try:
+                resp, rp = self.server.dispatch(h, payload)
+            except Exception as e:     # never kill the connection silently
+                resp, rp = {"ok": False,
+                            "error": f"{type(e).__name__}: {e}"}, b""
+            try:
+                P.send_msg(sock, resp, rp)
+            except (ConnectionError, OSError):
+                return
+            if h.get("op") == "shutdown":
+                threading.Thread(target=self.server.shutdown,
+                                 daemon=True).start()
+                return
+
+
+def _spawn_entry(conn, snapshot_path: str | None = None,
+                 port: int = 0) -> None:
+    """multiprocessing spawn target: bind ``port`` (0 = ephemeral), report
+    the bound port through ``conn``, serve until shutdown.  Restarts pass
+    the original port so clients can reconnect to a fixed address."""
+    server = ShardServer(("127.0.0.1", port), snapshot_path=snapshot_path)
+    conn.send(server.server_address[1])
+    conn.close()
+    server.serve_forever()
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description="one ParameterDB shard")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=0)
+    ap.add_argument("--snapshot", default=None,
+                    help="state file for crash-restart survival")
+    args = ap.parse_args(argv)
+    server = ShardServer((args.host, args.port), snapshot_path=args.snapshot)
+    print(f"shard listening on {server.server_address[0]}:"
+          f"{server.server_address[1]}", flush=True)
+    server.serve_forever()
+
+
+if __name__ == "__main__":
+    main()

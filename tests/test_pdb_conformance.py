@@ -13,7 +13,13 @@ backend:
     ``random_schedule`` property fuzzer and on real threads, while *not*
     being required to be sequentially correct;
   * the JAX ring-buffer backend must agree with ``sequential_result``-style
-    ground truth at delta=0 and emit the same kind of Op history.
+    ground truth at delta=0 and emit the same kind of Op history;
+  * the multi-process sharded backend (``repro.pdb.server``: real shard
+    processes + socket RPC + client caches + clock gossip) must meet the
+    same bar — delta=0 bit-identity, merged-global-history oracle, SSP
+    clock bound — plus distributed-only invariants: the merged history is
+    an order-preserving merge of the per-shard histories, and cache hits
+    never change results.
 """
 import numpy as np
 import pytest
@@ -23,6 +29,7 @@ from repro.core import threaded as T
 from repro.pdb import (InProcessParameterDB, InadmissibleOp, SSPPolicy,
                        ThreadedParameterDB, make_policy, random_schedule,
                        run_interleaved, ssp_clock_bound_violations)
+from repro.pdb.server import ShardCluster, run_distributed_lr
 
 SEQ_POLICIES = ["bsp", "dc", "dc-array"]   # sequentially correct at delta=0
 ALL_POLICIES = SEQ_POLICIES + ["ssp", "hogwild"]
@@ -239,3 +246,94 @@ def test_jax_engine_group_delays_telemetry():
     assert s["max_staleness"] == 2
     assert s["stale_reads"] > 0
     assert np.isfinite(float(m["loss"]))
+
+
+# ---------------------------------------------------------------------------
+# The multi-process sharded backend (repro.pdb.server)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", SEQ_POLICIES)
+def test_server_delta0_bit_identical(data, policy):
+    """Real shard processes, socket RPC, client caches — and still
+    bit-identical to single-threaded sequential execution at delta=0."""
+    task = _task(data)
+    workers = 4
+    seq = T.run_sequential(task, workers)
+    res = run_distributed_lr(task, workers, n_shards=2, policy=policy,
+                             delta=0)
+    assert np.array_equal(res.theta, seq)
+    assert H.is_complete(res.history, workers, task.n_iters)
+    assert H.is_sequentially_correct(res.history, workers)
+    assert res.staleness["max_staleness"] == 0
+    assert res.staleness["stale_reads"] == 0
+
+
+def test_server_delta_relaxed_cache_hits(data):
+    """delta>0 must respect the staleness bound, and the client cache must
+    actually serve reads (admissible cached versions skip the payload)."""
+    task = _task(data, n_iters=8)
+    res = run_distributed_lr(task, 4, n_shards=2, policy="dc-array", delta=1)
+    assert res.staleness["max_staleness"] <= 1
+    assert res.cache["cache_hits"] > 0
+    assert res.cache["bytes_saved"] > 0
+    init_loss = T.loss(task, np.zeros(task.X.shape[1]))
+    assert T.loss(task, res.theta) < init_loss
+
+
+def test_server_ssp_clock_bound(data):
+    """SSP on first-class per-worker clocks: the slack bound must hold on
+    the merged global history exactly as it does in-process."""
+    task = _task(data, n_iters=8)
+    res = run_distributed_lr(task, 4, n_shards=2, policy="ssp", delta=2)
+    assert H.is_complete(res.history, 4, 8)
+    assert ssp_clock_bound_violations(res.history, 4, 2) == []
+    assert res.staleness["max_staleness"] <= 2
+
+
+def test_server_op_counts_match_other_backends(data):
+    task = _task(data, n_iters=4)
+    p = 3
+    res = run_distributed_lr(task, p, n_shards=2, policy="hogwild")
+    assert res.staleness["reads"] == p * p * task.n_iters
+    assert res.staleness["writes"] == p * task.n_iters
+    assert H.is_complete(res.history, p, task.n_iters)
+
+
+def test_server_merged_history_is_order_preserving(data):
+    """The global history must be an order-preserving merge of the
+    per-shard histories (each shard's local order is authoritative for
+    the chunks it owns) — the invariant that makes
+    ``is_sequentially_correct`` sound on the merged history."""
+    task = _task(data, n_iters=4)
+    workers = 4
+    slices = T.chunk_slices(task.X.shape[1], workers)
+    schedule = task.sample_schedule()
+    init = [np.zeros(sl.stop - sl.start) for sl in slices]
+    with ShardCluster(init, workers, n_shards=3, policy="dc",
+                      delta=0) as cluster:
+        import threading
+
+        def worker(i, db):
+            for itr in range(1, task.n_iters + 1):
+                theta = np.concatenate(db.read_all(i, itr))
+                db.write(i, i, itr,
+                         T.chunk_update(task, theta, slices[i], itr,
+                                        schedule))
+            db.close()
+
+        threads = [threading.Thread(
+            target=worker, args=(i, cluster.make_client(i)), daemon=True)
+            for i in range(workers)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=120)
+        assert not any(t.is_alive() for t in threads)
+        pulled = cluster.pull()
+    parts = [[op for _, op in part] for part in pulled.per_shard]
+    assert H.is_order_preserving_merge(pulled.history, parts)
+    assert H.is_sequentially_correct(pulled.history, workers)
+    # chunk ownership is a partition: each op recorded on exactly one shard
+    for shard_idx, part in enumerate(parts):
+        from repro.pdb.server import shard_of
+        assert all(shard_of(op.chunk, 3) == shard_idx for op in part)

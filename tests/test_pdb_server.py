@@ -1,0 +1,282 @@
+"""Unit + fault tests for the distributed ParameterDB (repro.pdb.server).
+
+Covers the layers the conformance matrix exercises only end-to-end:
+
+  * the wire protocol (frame round-trips, array packing, hash sharding);
+  * per-worker vector clocks and policy cache-admissibility bounds;
+  * the value-bounded staleness policy (vap) and its conditional reads;
+  * Lamport-clock history merging (synthetic, order-preservation);
+  * the WaitTimeout stall diagnostic (threaded backend and shard RPC);
+  * retry-with-backoff and the shard kill/restart drill (snapshot restore
+    must preserve delta=0 bit-identity through a mid-run shard death).
+"""
+import math
+import socket
+import tempfile
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import history as H
+from repro.core import threaded as T
+from repro.pdb import (ThreadedParameterDB, ValueBoundPolicy, VectorClocks,
+                       WaitTimeout, make_policy, merge_timed_histories)
+from repro.pdb.server import ShardCluster, owned_chunks, run_distributed_lr, \
+    shard_of
+from repro.pdb.server import protocol as P
+from repro.runtime.fault import Backoff, ShardDeathPlan, retry_with_backoff
+
+
+# ---------------------------------------------------------------------------
+# Wire protocol
+# ---------------------------------------------------------------------------
+
+def test_frame_roundtrip_over_socketpair():
+    a, b = socket.socketpair()
+    try:
+        arr = np.arange(12, dtype=np.float64).reshape(3, 4)
+        meta, payload = P.encode_array(arr)
+        P.send_msg(a, {"op": "write", "worker": 1, **meta}, payload)
+        header, got = P.recv_msg(b)
+        assert header["op"] == "write" and header["worker"] == 1
+        np.testing.assert_array_equal(P.decode_array(header, got), arr)
+        # empty-payload frame
+        P.send_msg(b, {"ok": True})
+        header, got = P.recv_msg(a)
+        assert header == {"ok": True} and got == b""
+    finally:
+        a.close()
+        b.close()
+
+
+def test_recv_raises_on_peer_close():
+    a, b = socket.socketpair()
+    a.close()
+    with pytest.raises(ConnectionError):
+        P.recv_msg(b)
+    b.close()
+
+
+def test_pack_unpack_arrays():
+    arrays = {0: np.zeros(3), 2: np.arange(4, dtype=np.float32),
+              5: np.ones((2, 2))}
+    manifest, payload = P.pack_arrays(arrays)
+    out = P.unpack_arrays(manifest, payload)
+    assert set(out) == {0, 2, 5}
+    for c, v in arrays.items():
+        np.testing.assert_array_equal(out[c], v)
+        assert out[c].dtype == v.dtype
+
+
+def test_shard_hash_partitions_chunks():
+    for n_shards in (1, 2, 3, 5):
+        seen = []
+        for s in range(n_shards):
+            owned = owned_chunks(s, 40, n_shards)
+            assert all(shard_of(c, n_shards) == s for c in owned)
+            seen += owned
+        assert sorted(seen) == list(range(40))   # a partition, no overlap
+    # hashing scatters: consecutive chunks don't all land on one shard
+    assert len({shard_of(c, 2) for c in range(4)}) == 2
+
+
+# ---------------------------------------------------------------------------
+# Vector clocks + cache admissibility
+# ---------------------------------------------------------------------------
+
+def test_vector_clocks_merge_is_elementwise_max():
+    c = VectorClocks.zero(3)
+    c.observe_commit(0, 5)
+    c.observe_frontier(2, 2)
+    c.merge([1, 4, 0], [0, 3, 1])
+    assert c.commit == [5, 4, 0] and c.frontier == [0, 3, 2]
+    assert c.min_commit == 0 and c.min_frontier == 0
+    c.observe_commit(0, 3)                    # stale observation: no regress
+    assert c.commit[0] == 5
+
+
+def test_bitvector_cache_admissible_exactly_previous_version():
+    pol = make_policy("dc", 2, 0, n_chunks=2)
+    assert pol.cache_admissible(0, cached_version=1, itr=2)
+    assert not pol.cache_admissible(0, cached_version=0, itr=2)   # stale
+    assert not pol.cache_admissible(0, cached_version=2, itr=2)   # ahead
+
+
+def test_delta_cache_admissible_bound_and_hogwild_disabled():
+    pol = make_policy("dc-array", 2, 2, n_chunks=2)
+    assert pol.cache_admissible(0, cached_version=1, itr=4)    # 4-1-2 <= 1
+    assert not pol.cache_admissible(0, cached_version=0, itr=4)
+    hog = make_policy("hogwild", 2, n_chunks=2)
+    # an infinite bound would freeze cached values forever: disabled
+    assert not hog.cache_admissible(0, cached_version=0, itr=99)
+
+
+def test_bsp_cache_needs_version_and_commit_frontier():
+    pol = make_policy("bsp", 2, n_chunks=2)
+    assert not pol.cache_admissible(0, cached_version=1, itr=2)
+    pol.observe_commit(0, 1)
+    pol.observe_commit(1, 1)
+    assert pol.cache_admissible(0, cached_version=1, itr=2)
+    assert not pol.cache_admissible(0, cached_version=0, itr=2)
+
+
+def test_value_bound_policy_unit():
+    pol = ValueBoundPolicy(2, vbound=0.5, n_chunks=2)
+    assert pol.name == "vap"
+    assert math.isinf(pol.delta)              # admission never blocks reads
+    assert pol.can_read(0, 0, 9) and pol.can_write(0, 0, 9)
+    assert not pol.cache_admissible(0, 0, 1)  # validation is server-side
+    with pytest.raises(ValueError):
+        ValueBoundPolicy(2, vbound=-1.0)
+
+
+# ---------------------------------------------------------------------------
+# Lamport history merge
+# ---------------------------------------------------------------------------
+
+def test_merge_timed_histories_orders_and_preserves():
+    r, w = H.r, H.w
+    part0 = [(1, r(0, 0, 1)), (4, w(0, 0, 1)), (9, r(0, 0, 2))]
+    part1 = [(2, r(1, 1, 1)), (3, w(1, 1, 1))]
+    merged = merge_timed_histories([part0, part1])
+    assert merged == [r(0, 0, 1), r(1, 1, 1), w(1, 1, 1), w(0, 0, 1),
+                      r(0, 0, 2)]
+    assert H.is_order_preserving_merge(merged, [[op for _, op in part0],
+                                                [op for _, op in part1]])
+
+
+def test_merge_breaks_lamport_ties_by_shard_then_sequence():
+    r = H.r
+    part0 = [(5, r(0, 0, 1)), (5, r(0, 0, 2))]
+    part1 = [(5, r(1, 1, 1))]
+    merged = merge_timed_histories([part0, part1])
+    assert merged == [r(0, 0, 1), r(0, 0, 2), r(1, 1, 1)]
+
+
+# ---------------------------------------------------------------------------
+# WaitTimeout diagnostics (satellite: *which* op stalled, not just that
+# something did)
+# ---------------------------------------------------------------------------
+
+def test_threaded_timeout_names_the_stalled_op():
+    db = ThreadedParameterDB([np.zeros(1), np.zeros(1)], 2, policy="dc",
+                             timeout=0.05)
+    with pytest.raises(WaitTimeout) as ei:
+        db.read(1, 0, 3)            # inadmissible forever: nobody writes
+    e = ei.value
+    assert (e.kind, e.worker, e.chunk, e.itr) == ("r", 1, 0, 3)
+    msg = str(e)
+    assert "timed out" in msg
+    assert "r1[pi0][3]" in msg          # the op, in the paper's notation
+    assert "BitVectorPolicy" in msg     # which policy state blocked it
+
+
+def test_shard_stall_carries_diagnostic_to_client():
+    """A stalled admission wait on a *shard* must surface client-side as
+    the same WaitTimeout diagnostic, naming the op and the shard."""
+    init = [np.zeros(2), np.zeros(2)]
+    with ShardCluster(init, n_workers=2, n_shards=1, policy="dc",
+                      timeout=0.2) as cluster:
+        db = cluster.make_client(0)
+        with pytest.raises(WaitTimeout) as ei:
+            db.read(0, 0, 3)        # needs w[pi0][2]: never happens
+        msg = str(ei.value)
+        assert "timed out" in msg and "r0[pi0][3]" in msg
+        assert "shard0" in msg
+        db.close()
+
+
+# ---------------------------------------------------------------------------
+# Backoff + shard death
+# ---------------------------------------------------------------------------
+
+def test_backoff_schedule_is_exponential_and_capped():
+    b = Backoff(max_retries=5, base_delay=0.1, multiplier=2.0, max_delay=0.5)
+    assert [b.delay(i) for i in range(1, 6)] == [0.1, 0.2, 0.4, 0.5, 0.5]
+
+
+def test_retry_with_backoff_retries_then_succeeds():
+    from repro.pdb import Telemetry
+    calls = []
+
+    def flaky():
+        calls.append(1)
+        if len(calls) < 3:
+            raise ConnectionResetError("boom")
+        return "ok"
+
+    tele = Telemetry()
+    got = retry_with_backoff(flaky, Backoff(max_retries=5, base_delay=0.001),
+                             telemetry=tele)
+    assert got == "ok" and len(calls) == 3
+    assert tele.stats.retried_steps == 2      # surfaces in staleness summary
+
+
+def test_retry_with_backoff_exhausts_budget():
+    def always():
+        raise ConnectionResetError("down")
+
+    with pytest.raises(ConnectionResetError):
+        retry_with_backoff(always, Backoff(max_retries=2, base_delay=0.001))
+
+
+def test_shard_death_plan_fires_once():
+    class FakeCluster:
+        killed, restarted = [], []
+
+        def kill_shard(self, s):
+            self.killed.append(s)
+
+        def restart_shard(self, s):
+            self.restarted.append(s)
+
+    plan = ShardDeathPlan(kill_at_step=3, shard=1)
+    fc = FakeCluster()
+    assert not plan.maybe_kill(2, fc)
+    assert plan.maybe_kill(3, fc)
+    assert not plan.maybe_kill(3, fc)         # fires exactly once
+    assert fc.killed == [1] and fc.restarted == [1]
+
+
+@pytest.mark.slow
+def test_shard_kill_restart_preserves_bit_identity():
+    """The full drill: kill a shard mid-run, restart it from its snapshot;
+    clients must recover via reconnect-with-backoff, retries must surface
+    in telemetry, and delta=0 bit-identity must survive."""
+    X, y = T.make_synthetic_lr(120, 24, seed=2)
+    task = T.LRTask(X, y, n_iters=8, mode="gd")
+    expect = T.run_sequential(task, 4)
+    plan = ShardDeathPlan(kill_at_step=4, shard=1, restart=True)
+    with tempfile.TemporaryDirectory() as snap:
+        res = run_distributed_lr(task, 4, n_shards=2, policy="dc", delta=0,
+                                 snapshot_dir=snap, death_plan=plan,
+                                 backoff=Backoff(max_retries=12))
+    assert plan.fired
+    assert res.retries > 0
+    assert res.staleness["retried_steps"] >= res.retries
+    assert np.array_equal(res.theta, expect)
+    assert H.is_sequentially_correct(res.history, 4)
+
+
+# ---------------------------------------------------------------------------
+# Value-bounded staleness end-to-end (Dai et al. 2014 style)
+# ---------------------------------------------------------------------------
+
+def test_vap_conditional_reads_validate_within_bound():
+    """With a huge vbound nearly every re-read is answered not-modified
+    (drift within bound -> no payload); with vbound=0 every changed chunk
+    must be re-shipped."""
+    X, y = T.make_synthetic_lr(120, 24, seed=0)
+    task = T.LRTask(X, y, n_iters=6, mode="gd")
+    loose = run_distributed_lr(task, 3, n_shards=2, policy="vap",
+                               vbound=1e9)
+    tight = run_distributed_lr(task, 3, n_shards=2, policy="vap",
+                               vbound=0.0)
+    assert loose.cache["cache_validated"] > 0
+    assert loose.cache["bytes_saved"] > tight.cache["bytes_saved"]
+    assert H.is_complete(loose.history, 3, task.n_iters)
+    # vbound=0 behaves like an exact re-fetch: values match hogwild-free
+    # reads (single write per chunk/iter), so the run still converges
+    init_loss = T.loss(task, np.zeros(task.X.shape[1]))
+    assert T.loss(task, tight.theta) < init_loss
