@@ -59,12 +59,17 @@ def bench_threaded(n_workers: int = 4, n_iters: int = 60,
 
 def bench_server(n_shards: int = 2, n_workers: int = 4, n_iters: int = 20,
                  n_features: int = 960, n_examples: int = 2000,
-                 repeats: int = 2) -> list[tuple[str, float, float]]:
+                 repeats: int = 2, modes: tuple[bool, ...] = (False, True)
+                 ) -> list[tuple[str, float, float]]:
     """(name, us_per_db_op, iters_per_sec) per policy against a live
     shard cluster — the distributed-throughput axis.  Op count matches
     the threaded bench (p*(p+1) DB ops per iteration), so us/op is
     directly comparable: the difference is pure RPC + process cost, less
-    whatever the client cache absorbs."""
+    whatever the client cache absorbs.  ``serverSxW/<policy>`` rows run
+    the per-chunk v1 RPC path; ``serverSxW/<policy>_batched`` the
+    protocol-v2 batched + pipelined path (end-to-end rows are partly
+    gradient compute — see ``bench_server_readset`` for the isolated
+    RPC-layer comparison)."""
     from repro.pdb.server import run_distributed_lr
 
     X, y = T.make_synthetic_lr(n_examples, n_features, seed=0)
@@ -73,15 +78,57 @@ def bench_server(n_shards: int = 2, n_workers: int = 4, n_iters: int = 20,
     rows = []
     for policy in POLICIES:
         delta = 2 if policy == "ssp" else 0
-        walls = []
-        for _ in range(repeats):
-            res = run_distributed_lr(task, n_workers, n_shards=n_shards,
-                                     policy=policy, delta=delta,
-                                     record_history=False)
-            walls.append(res.wall_time)
-        wall = min(walls)
-        rows.append((f"server{n_shards}x{n_workers}/{policy}",
-                     wall / ops_total * 1e6, n_iters / wall))
+        for batched in modes:
+            walls = []
+            for _ in range(repeats):
+                res = run_distributed_lr(task, n_workers, n_shards=n_shards,
+                                         policy=policy, delta=delta,
+                                         record_history=False,
+                                         batched=batched)
+                walls.append(res.wall_time)
+            wall = min(walls)
+            suffix = "_batched" if batched else ""
+            rows.append((f"server{n_shards}x{n_workers}/{policy}{suffix}",
+                         wall / ops_total * 1e6, n_iters / wall))
+    return rows
+
+
+def bench_server_readset(n_shards: int = 2, n_workers: int = 4,
+                         n_chunks: int = 8, chunk_size: int = 240,
+                         n_iters: int = 150,
+                         modes: tuple[bool, ...] = (False, True)
+                         ) -> list[tuple[str, float, float]]:
+    """The RPC layer in isolation: one client drives the Def-3 iteration
+    shape — ``read_all`` of every chunk plus ``write_many`` of its owned
+    group — with no gradient compute in the loop, under hogwild (admission
+    never blocks).  ``readset_batched`` vs ``readset`` is therefore the
+    pure v1-vs-v2 protocol comparison: per-chunk round-trips against
+    batched + pipelined frames, write-behind and one-way broadcasts."""
+    from repro.pdb.server import ShardCluster
+
+    chunks = [np.zeros(chunk_size, np.float64) for _ in range(n_chunks)]
+    owned = [c for c in range(n_chunks) if c % n_workers == 0]
+    ops_per_iter = n_chunks + len(owned)
+    rows = []
+    for batched in modes:
+        cluster = ShardCluster(chunks, n_workers, n_shards,
+                               policy="hogwild", delta=0, record=False,
+                               batched=batched)
+        with cluster:
+            client = cluster.make_client(0)
+            client.read_all(0, 1)        # warm connections + cache
+            client.write_many(0, [(j, 1, chunks[j]) for j in owned])
+            t0 = time.perf_counter()
+            for i in range(2, n_iters + 2):
+                client.read_all(0, i)
+                client.write_many(0, [(j, i, chunks[j]) for j in owned])
+            client.flush()               # settle write-behind inside the clock
+            wall = time.perf_counter() - t0
+            client.close()
+        suffix = "_batched" if batched else ""
+        rows.append((f"server{n_shards}x{n_workers}/readset{suffix}",
+                     wall / (n_iters * ops_per_iter) * 1e6,
+                     n_iters / wall))
     return rows
 
 
@@ -109,8 +156,10 @@ def main() -> None:
         which = sys.argv[sys.argv.index("--backend") + 1]
         if which != "server":
             raise SystemExit(f"unknown --backend {which!r} (only 'server')")
-        for name, us, thru in bench_server(n_iters=10 if quick else 20,
-                                           repeats=1 if quick else 2):
+        rows = bench_server(n_iters=10 if quick else 20,
+                            repeats=1 if quick else 2)
+        rows += bench_server_readset(n_iters=50 if quick else 150)
+        for name, us, thru in rows:
             print(f"{name},{us:.2f},{thru:.2f}")
         return
     t_rows = bench_threaded(n_iters=20 if quick else 60,
@@ -119,6 +168,7 @@ def main() -> None:
         print(f"{name},{us:.2f},{thru:.2f}")
     v_rows = bench_server(n_iters=10 if quick else 20,
                           repeats=1 if quick else 2)
+    v_rows += bench_server_readset(n_iters=50 if quick else 150)
     for name, us, thru in v_rows:
         print(f"{name},{us:.2f},{thru:.2f}")
     s_rows = bench_simulated(n_iters=20 if quick else 50)
@@ -136,6 +186,9 @@ def main() -> None:
           file=sys.stderr)
     dc_v, bsp_v = by["server2x4/dc"], by["server2x4/bsp"]
     print(f"# server(2x4) dc vs bsp: {(dc_v - bsp_v) / bsp_v * 100:+.1f}% "
+          f"iters/sec", file=sys.stderr)
+    rs, rsb = by["server2x4/readset"], by["server2x4/readset_batched"]
+    print(f"# server(2x4) RPC layer, batched vs per-op: {rsb / rs:.2f}x "
           f"iters/sec", file=sys.stderr)
     dc_s, bsp_s = by["simulated32/dc"], by["simulated32/bsp"]
     print(f"# simulated(32) dc vs bsp: {(dc_s - bsp_s) / bsp_s * 100:+.1f}% "

@@ -69,7 +69,8 @@ def main() -> int:
                        lambda: pdb_throughput.bench_threaded(
                            n_iters=20, repeats=2)
                        + pdb_throughput.bench_server(
-                           n_iters=10, repeats=1)))
+                           n_iters=10, repeats=1)
+                       + pdb_throughput.bench_server_readset(n_iters=50)))
     else:
         print(f"# no baseline {artifacts.PDB_JSON}; skipping",
               file=sys.stderr)

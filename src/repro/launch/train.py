@@ -96,7 +96,8 @@ def run_server_backend(args) -> dict:
 
     cluster = ShardCluster(chunks, p, args.shards, policy=policy,
                            delta=args.delta, record=True,
-                           snapshot_dir=snapshot_dir)
+                           snapshot_dir=snapshot_dir,
+                           batched=args.rpc != "per-op")
     losses: list[float] = []
     errors: list[BaseException] = []
     t0 = time.time()
@@ -111,9 +112,12 @@ def run_server_backend(args) -> dict:
                 batch = make_lm_batch(spec, (itr - 1) * p + k)
                 loss, grads = grad_fn(pk, batch)
                 g = jax.device_get(ravel_pytree(grads)[0])
-                for c in owned[k]:
-                    a, b = int(bounds[c]), int(bounds[c + 1])
-                    db.write(k, c, itr, theta[a:b] - args.lr * g[a:b])
+                # one write_batch per owner shard for the whole owned group
+                # (per-chunk round-trips on the per-op path)
+                db.write_many(k, [
+                    (c, itr, theta[int(bounds[c]):int(bounds[c + 1])]
+                     - args.lr * g[int(bounds[c]):int(bounds[c + 1])])
+                    for c in owned[k]])
                 if k == 0:
                     losses.append(float(loss))
                     if (itr - 1) % args.log_every == 0 or itr == args.steps:
@@ -192,6 +196,9 @@ def main(argv=None) -> dict:
     ap.add_argument("--kill-shard-at-step", type=int, default=-1,
                     help="server backend: kill+restart the last shard at "
                          "this step (shard-death drill)")
+    ap.add_argument("--rpc", choices=["batched", "per-op"], default="batched",
+                    help="server backend: protocol-v2 batched/pipelined "
+                         "RPC (default) or per-chunk v1 round-trips")
     ap.add_argument("--snapshot-dir", default="",
                     help="server backend: shard snapshot directory "
                          "(crash-restart survival)")

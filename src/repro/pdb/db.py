@@ -101,6 +101,15 @@ class ParameterDB:
     def history(self):
         return self.telemetry.history
 
+    def read_all(self, worker: int, itr: int) -> list[np.ndarray]:
+        """The full Def-3 read set of one iteration — a first-class backend
+        method, not a convenience loop: backends where a read crosses a
+        process boundary override it with a batched multi-chunk request
+        (``repro.pdb.server.client`` coalesces it into one ``read_batch``
+        RPC per shard).  The default issues per-chunk reads in admission
+        order, which every in-process backend executes exactly."""
+        return [self.read(worker, j, itr) for j in range(self.m)]
+
     def values(self) -> list[np.ndarray]:
         return [c.copy() for c in self.chunks]
 
@@ -167,10 +176,6 @@ class ThreadedParameterDB(ParameterDB):
             val = self._do_read(worker, chunk, itr)
             self.cond.notify_all()
             return val
-
-    def read_all(self, worker: int, itr: int) -> list[np.ndarray]:
-        """Read every chunk for this iteration (in admission order)."""
-        return [self.read(worker, j, itr) for j in range(self.m)]
 
     def write(self, worker: int, chunk: int, itr: int,
               value: np.ndarray) -> None:

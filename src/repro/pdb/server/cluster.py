@@ -70,13 +70,14 @@ class ShardCluster:
     def __init__(self, init_chunks, n_workers: int, n_shards: int = 2,
                  policy: str = "dc", delta=0, vbound: float | None = None,
                  record: bool = True, timeout: float = 60.0,
-                 snapshot_dir: str | None = None):
+                 snapshot_dir: str | None = None, batched: bool = True):
         self.init_chunks = [np.array(c, copy=True) for c in init_chunks]
         self.p, self.m = n_workers, len(self.init_chunks)
         self.n_shards = n_shards
         self.policy, self.delta, self.vbound = policy, delta, vbound
         self.record, self.timeout = record, timeout
         self.snapshot_dir = snapshot_dir
+        self.batched = batched
         self.procs: list[mp.process.BaseProcess | None] = [None] * n_shards
         self.addrs: list[tuple[str, int]] = [None] * n_shards
         self._ctx = mp.get_context("spawn")
@@ -188,7 +189,7 @@ class ShardCluster:
         return ClientParameterDB(
             worker, list(self.addrs), self.p, self.m, policy=self.policy,
             delta=self.delta, vbound=self.vbound, timeout=self.timeout,
-            backoff=backoff)
+            backoff=backoff, batched=self.batched)
 
     def pull(self) -> PullResult:
         values: dict[int, np.ndarray] = {}
@@ -228,7 +229,8 @@ def run_distributed_lr(task, n_workers: int, n_shards: int = 2,
                        timeout: float = 60.0,
                        snapshot_dir: str | None = None,
                        death_plan=None,
-                       backoff: Backoff | None = None
+                       backoff: Backoff | None = None,
+                       batched: bool = True
                        ) -> DistributedRunStats:
     """Train :class:`repro.core.threaded.LRTask` with ``n_workers`` client
     threads against ``n_shards`` shard processes — the process-level twin of
@@ -237,7 +239,12 @@ def run_distributed_lr(task, n_workers: int, n_shards: int = 2,
 
     ``death_plan`` (a :class:`repro.runtime.fault.ShardDeathPlan`) injects a
     shard kill at a chosen iteration, fired by worker 0 — pair it with
-    ``snapshot_dir`` so the restarted shard resumes where it died."""
+    ``snapshot_dir`` so the restarted shard resumes where it died.
+
+    ``batched=True`` (default) routes the hot paths through the protocol-v2
+    batched/pipelined RPC layer (one ``read_batch`` per shard per
+    iteration, fire-and-forget clock broadcasts); ``batched=False`` keeps
+    the per-chunk v1 round-trips."""
     from ...core.threaded import chunk_slices, chunk_update
 
     d = task.X.shape[1]
@@ -247,7 +254,8 @@ def run_distributed_lr(task, n_workers: int, n_shards: int = 2,
 
     cluster = ShardCluster(init, n_workers, n_shards, policy=policy,
                            delta=delta, vbound=vbound, record=record_history,
-                           timeout=timeout, snapshot_dir=snapshot_dir)
+                           timeout=timeout, snapshot_dir=snapshot_dir,
+                           batched=batched)
     errors: list[BaseException] = []
     clients: list[ClientParameterDB] = []
 
@@ -281,6 +289,8 @@ def run_distributed_lr(task, n_workers: int, n_shards: int = 2,
         if any(t.is_alive() for t in threads):
             raise RuntimeError("distributed workers did not terminate "
                                "(deadlock?)")
+        for c in clients:     # drain in-flight fire-and-forget broadcasts
+            c.flush()         # so pull() sees fully-settled shard state
         pulled = cluster.pull()
         cache = {"cache_hits": 0, "cache_misses": 0,
                  "cache_validated": 0, "bytes_saved": 0}
@@ -305,28 +315,34 @@ def run_distributed_lr(task, n_workers: int, n_shards: int = 2,
 # ---------------------------------------------------------------------------
 
 def smoke(n_shards: int = 2, n_workers: int = 4, n_iters: int = 8,
-          verbose: bool = True) -> bool:
+          verbose: bool = True, modes: tuple[bool, ...] = (False, True)
+          ) -> bool:
     """The tier-2 CI check: dc/delta=0 on a live shard cluster must be
     bit-identical to sequential, with a sequentially-correct merged
-    history.  Returns True on success."""
+    history — on the per-chunk v1 RPC path *and* the batched/pipelined v2
+    path (``modes`` selects which).  Returns True on success."""
     from ...core.history import is_sequentially_correct
     from ...core.threaded import LRTask, make_synthetic_lr, run_sequential
 
     X, y = make_synthetic_lr(200, 24, seed=0)
     task = LRTask(X, y, n_iters=n_iters, mode="gd")
     expect = run_sequential(task, n_workers)
-    res = run_distributed_lr(task, n_workers, n_shards, policy="dc", delta=0)
-    identical = bool(np.array_equal(res.theta, expect))
-    correct = is_sequentially_correct(res.history, n_workers)
-    if verbose:
-        print(f"shards={n_shards} workers={n_workers} iters={n_iters} "
-              f"policy=dc delta=0")
-        print(f"  bit-identical to sequential: {identical}")
-        print(f"  merged history sequentially correct: {correct} "
-              f"({len(res.history)} ops)")
-        print(f"  staleness: {res.staleness}")
-        print(f"  cache: {res.cache}  rpc retries: {res.retries}")
-    return identical and correct
+    ok = True
+    for batched in modes:
+        res = run_distributed_lr(task, n_workers, n_shards, policy="dc",
+                                 delta=0, batched=batched)
+        identical = bool(np.array_equal(res.theta, expect))
+        correct = is_sequentially_correct(res.history, n_workers)
+        if verbose:
+            print(f"shards={n_shards} workers={n_workers} iters={n_iters} "
+                  f"policy=dc delta=0 rpc={'batched' if batched else 'per-op'}")
+            print(f"  bit-identical to sequential: {identical}")
+            print(f"  merged history sequentially correct: {correct} "
+                  f"({len(res.history)} ops)")
+            print(f"  staleness: {res.staleness}")
+            print(f"  cache: {res.cache}  rpc retries: {res.retries}")
+        ok = ok and identical and correct
+    return ok
 
 
 def main(argv=None) -> int:
@@ -338,9 +354,14 @@ def main(argv=None) -> int:
     ap.add_argument("--shards", type=int, default=2)
     ap.add_argument("--workers", type=int, default=4)
     ap.add_argument("--iters", type=int, default=8)
+    ap.add_argument("--rpc", choices=["both", "batched", "per-op"],
+                    default="both",
+                    help="which RPC path(s) the smoke exercises")
     args = ap.parse_args(argv)
     if args.smoke:
-        ok = smoke(args.shards, args.workers, args.iters)
+        modes = {"both": (False, True), "batched": (True,),
+                 "per-op": (False,)}[args.rpc]
+        ok = smoke(args.shards, args.workers, args.iters, modes=modes)
         print("SMOKE PASS" if ok else "SMOKE FAIL")
         return 0 if ok else 1
     ap.print_help()

@@ -5,19 +5,42 @@ Every message (request or response) is one frame:
     u32_be header_len | header (UTF-8 JSON) | u32_be payload_len | payload
 
 The JSON header carries the op type, coordinates, clock vectors and array
-metadata; the payload carries raw ``ndarray`` bytes (C-order) when a chunk
-value travels, else is empty.  Requests and responses alternate strictly on
-a connection (every request gets exactly one response), so one worker's
-socket needs no request ids — FIFO matching is the protocol.
+metadata; the payload carries raw ``ndarray`` bytes (C-order) when chunk
+values travel, else is empty.  Frames whose header or payload length
+exceeds ``MAX_FRAME`` are rejected at receive time (``ConnectionError``).
+
+**Protocol v2 — request ids + batching + pipelining.**  Every request may
+carry an ``id`` (the data-plane client always does); the response echoes
+it, which is what lets a client *pipeline*: several requests can be on the
+wire before their responses are read, each receive matched back to its
+request by ``id`` (acknowledged pipelined messages drain in whatever order
+they complete relative to the synchronous stream).  A request may instead
+carry ``noreply: true`` — the shard processes it and sends **no response
+frame at all** (used for clock broadcasts, whose loss is repaired by the
+``clocks`` gossip on every later header).  Because a shard serves each
+connection FIFO, a synchronous exchange (e.g. ``ping``) doubles as a
+delivery barrier for every one-way message sent before it.  v1 peers (the
+admin control plane) that send no ``id`` keep strict request/response
+alternation.
 
 Header fields by op (all requests also carry ``ts`` — the sender's Lamport
 clock — and may carry ``clocks``: ``{"commit": [...], "frontier": [...]}``):
 
   ``read``         worker, chunk, itr, cached_version?, cached_cum?
+  ``read_batch``   worker, itr,
+                   ops: [[chunk, itr, cached_version?, cached_cum?], ...],
+                   notify: [[chunk, itr, version], ...]  (cache-served
+                   reads piggybacked on the same frame); the response
+                   carries results: [[chunk, version, modified, cum], ...]
+                   plus a ``pack_arrays`` manifest + multi-chunk payload
+                   holding every modified chunk
   ``notify_read``  worker, chunk, itr, version   (a cache-served read)
   ``write``        worker, chunk, itr + array payload
-  ``commit``       worker, itr                   (commit-clock broadcast)
-  ``frontier``     worker, itr                   (read-frontier broadcast)
+  ``write_batch``  worker, ops: [[chunk, itr], ...] + manifest + packed
+                   multi-chunk payload; response results:
+                   [[chunk, version, cum], ...]
+  ``commit``       worker, itr    (commit-clock broadcast; one-way)
+  ``frontier``     worker, itr    (read-frontier broadcast; one-way)
   ``can``          kind ('r'|'w'), worker, chunk, itr
   ``init``         config + packed chunk arrays
   ``ping`` / ``pull`` / ``shutdown``
@@ -25,7 +48,14 @@ clock — and may carry ``clocks``: ``{"commit": [...], "frontier": [...]}``):
 Responses: ``{"ok": true, ...}`` or ``{"ok": false, "error": str,
 "stall": bool}`` — ``stall`` marks an admission-wait timeout, which the
 client re-raises as :class:`repro.pdb.db.WaitTimeout` with the shard's
-diagnostic intact.
+diagnostic intact.  A batch response is all-or-stall: sub-ops recorded
+before the stalled one stay recorded (the shard deduplicates per sub-op,
+so a batch replay is exactly-once per sub-op).
+
+Multi-chunk payloads use ``pack_arrays``/``unpack_arrays``: the manifest
+rows are ``[chunk_id, dtype, shape, offset, nbytes]`` into one
+concatenated byte string, preserving dtype and shape (0-d and empty
+arrays included) chunk by chunk.
 
 Chunk placement is by hash: ``shard_of(chunk, S)`` mixes the chunk id with
 a Knuth multiplicative hash before reducing mod S, so consecutive chunks
@@ -83,7 +113,9 @@ def recv_msg(sock: socket.socket) -> tuple[dict, bytes]:
 
 
 def encode_array(arr: np.ndarray) -> tuple[dict, bytes]:
-    arr = np.ascontiguousarray(arr)
+    # order="C" (not ascontiguousarray, whose contract is ndim >= 1 and
+    # would silently promote 0-d arrays to shape (1,))
+    arr = np.asarray(arr, order="C")
     return ({"dtype": arr.dtype.str, "shape": list(arr.shape)},
             arr.tobytes())
 
@@ -98,7 +130,7 @@ def pack_arrays(arrays: dict[int, np.ndarray]) -> tuple[list, bytes]:
     where manifest rows are [chunk_id, dtype, shape, offset, nbytes]."""
     manifest, parts, off = [], [], 0
     for cid in sorted(arrays):
-        a = np.ascontiguousarray(arrays[cid])
+        a = np.asarray(arrays[cid], order="C")
         b = a.tobytes()
         manifest.append([cid, a.dtype.str, list(a.shape), off, len(b)])
         parts.append(b)

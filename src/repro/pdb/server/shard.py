@@ -117,6 +117,10 @@ class ShardState:
         clocks = h.get("clocks")
         if clocks:
             self.policy.clocks.merge(clocks["commit"], clocks["frontier"])
+            # merged clocks can satisfy a blocked admission predicate (BSP
+            # frontier, SSP slack) even when this message records no op —
+            # wake waiters so piggybacked gossip alone makes progress
+            self.cond.notify_all()
 
     def _base_resp(self, chunk: int | None = None) -> dict:
         resp = {"ok": True, "clocks": self.policy.clocks.as_dict(),
@@ -131,37 +135,84 @@ class ShardState:
                      kind, w, c, a, self.cfg.timeout, self.policy,
                      where=f"shard{self.cfg.shard_id}")}, b"")
 
+    # -- op bodies (call under self.cond) ------------------------------------
+    def _admit(self, kind: str, w: int, c: int, a: int) -> bool:
+        """Block until the op is admissible (or already recorded — a crash
+        retry).  The Lamport stamp of the op is taken *after* this returns:
+        an op that waited must be stamped later than the op that admitted
+        it, or the merged global history misorders them."""
+        key = (kind, w, c, a)
+        pred = (self.policy.can_read if kind == "r" else self.policy.can_write)
+        return self.cond.wait_for(
+            lambda: key in self.seen or pred(w, c, a),
+            timeout=self.cfg.timeout)
+
+    def _record_notify(self, w: int, c: int, a: int, ver) -> bool:
+        """Record a client-cache-served read (bits, last-read arrays,
+        history, staleness at the *observed* version).  Returns True if the
+        op was new (False: duplicate delivery)."""
+        key = ("r", w, c, a)
+        if key in self.seen:
+            return False
+        self.policy.did_read(w, c, a)
+        self.telemetry.on_read(w, c, a, version=ver, lamport=self._tick(None))
+        self.seen.add(key)
+        self.cond.notify_all()
+        return True
+
+    def _serve_read(self, w: int, c: int, a: int, cached_ver,
+                    cached_cum) -> tuple[int, bool]:
+        """Admitted-read body: conditional serving + recording.  Returns
+        (served_version, modified); ``modified=False`` means the client's
+        cached copy is still valid (current, or within the value bound) and
+        no payload travels."""
+        key = ("r", w, c, a)
+        ver, cum = self.version[c], self.cum_change[c]
+        if key in self.seen:              # crash retry: serve, don't re-record
+            return ver, True
+        vb = self.cfg.vbound
+        if cached_ver is not None and cached_ver == ver:
+            served, modified = ver, False             # cache validated
+        elif (cached_ver is not None and vb is not None
+              and cached_cum is not None and cum - cached_cum <= vb):
+            served, modified = cached_ver, False      # within value bound
+        else:
+            served, modified = ver, True
+        self.policy.did_read(w, c, a)
+        self.telemetry.on_read(w, c, a, version=served,
+                               lamport=self._tick(None))
+        self.seen.add(key)
+        self.cond.notify_all()
+        return served, modified
+
+    def _apply_write(self, w: int, c: int, a: int, arr: np.ndarray) -> None:
+        """Admitted-write body: value + drift ledger + recording (idempotent
+        under duplicate delivery)."""
+        key = ("w", w, c, a)
+        if key in self.seen:
+            return
+        old = self.chunks[c]
+        if old.shape == arr.shape:
+            diff = np.abs(arr - old)
+            self.cum_change[c] += float(diff.max()) if diff.size else 0.0
+        self.chunks[c] = arr
+        self.version[c] = max(self.version[c], a)
+        self.policy.did_write(w, c, a)
+        self.telemetry.on_write(w, c, a, lamport=self._tick(None))
+        self.seen.add(key)
+        self.cond.notify_all()
+
     # -- message handlers ----------------------------------------------------
     def read(self, h: dict) -> tuple[dict, bytes]:
         w, c, a = h["worker"], h["chunk"], h["itr"]
-        key = ("r", w, c, a)
         with self.cond:
             self._merge_clocks(h)
-            ts = self._tick(h.get("ts"))
-            admissible = self.cond.wait_for(
-                lambda: key in self.seen or self.policy.can_read(w, c, a),
-                timeout=self.cfg.timeout)
-            if not admissible:
+            self._tick(h.get("ts"))       # receipt event (sender causality)
+            if not self._admit("r", w, c, a):
                 return self._stall("r", w, c, a)
-            ver, cum = self.version[c], self.cum_change[c]
-            if key in self.seen:          # crash retry: serve, don't re-record
-                served, modified = ver, True
-            else:
-                cached_ver = h.get("cached_version")
-                cached_cum = h.get("cached_cum")
-                vb = self.cfg.vbound
-                if cached_ver is not None and cached_ver == ver:
-                    served, modified = ver, False        # cache validated
-                elif (cached_ver is not None and vb is not None
-                      and cached_cum is not None and cum - cached_cum <= vb):
-                    served, modified = cached_ver, False  # within value bound
-                else:
-                    served, modified = ver, True
-                self.policy.did_read(w, c, a)
-                self.telemetry.on_read(w, c, a, version=served, lamport=ts)
-                self.seen.add(key)
-                self.snapshot()
-                self.cond.notify_all()
+            served, modified = self._serve_read(
+                w, c, a, h.get("cached_version"), h.get("cached_cum"))
+            self.snapshot()
             resp = self._base_resp(c)
             resp.update(version=served, modified=modified)
             if modified:
@@ -171,48 +222,93 @@ class ShardState:
             return resp, b""
 
     def notify_read(self, h: dict) -> tuple[dict, bytes]:
-        """A read the client served from its local cache: record it (bits,
-        last-read arrays, history, staleness at the *observed* version)."""
+        """A read the client served from its local cache."""
         w, c, a = h["worker"], h["chunk"], h["itr"]
-        key = ("r", w, c, a)
         with self.cond:
             self._merge_clocks(h)
-            ts = self._tick(h.get("ts"))
-            if key not in self.seen:
-                self.policy.did_read(w, c, a)
-                self.telemetry.on_read(w, c, a, version=h.get("version"),
-                                       lamport=ts)
-                self.seen.add(key)
+            self._tick(h.get("ts"))
+            if self._record_notify(w, c, a, h.get("version")):
                 self.snapshot()
-                self.cond.notify_all()
             return self._base_resp(c), b""
 
     def write(self, h: dict, payload: bytes) -> tuple[dict, bytes]:
         w, c, a = h["worker"], h["chunk"], h["itr"]
-        key = ("w", w, c, a)
         with self.cond:
             self._merge_clocks(h)
-            ts = self._tick(h.get("ts"))
-            admissible = self.cond.wait_for(
-                lambda: key in self.seen or self.policy.can_write(w, c, a),
-                timeout=self.cfg.timeout)
-            if not admissible:
+            self._tick(h.get("ts"))
+            if not self._admit("w", w, c, a):
                 return self._stall("w", w, c, a)
-            if key not in self.seen:
-                arr = P.decode_array(h, payload)
-                old = self.chunks[c]
-                if old.shape == arr.shape:
-                    diff = np.abs(arr - old)
-                    self.cum_change[c] += float(diff.max()) if diff.size else 0.0
-                self.chunks[c] = arr
-                self.version[c] = max(self.version[c], a)
-                self.policy.did_write(w, c, a)
-                self.telemetry.on_write(w, c, a, lamport=ts)
-                self.seen.add(key)
-                self.snapshot()
-                self.cond.notify_all()
+            self._apply_write(w, c, a, P.decode_array(h, payload))
+            self.snapshot()
             resp = self._base_resp(c)
             resp["version"] = self.version[c]
+            return resp, b""
+
+    def read_batch(self, h: dict) -> tuple[dict, bytes]:
+        """Protocol-v2 multi-chunk read: one frame carries every read this
+        worker needs from this shard at this iteration, plus piggybacked
+        ``notify`` entries for the reads its cache already served.
+
+        Sub-ops are admitted in order under a single condition-lock pass
+        (``wait_for`` releases the lock while blocked, so other handler
+        threads make progress — the interleaving is exactly the sequential
+        per-chunk client's).  Each sub-op gets its own post-admission
+        Lamport stamp; ``snapshot()`` runs once per batch.  A stalled
+        sub-op fails the whole batch (already-recorded sub-ops are kept:
+        the client's retry is deduplicated per sub-op)."""
+        w = h["worker"]
+        with self.cond:
+            self._merge_clocks(h)
+            self._tick(h.get("ts"))
+            recorded = False
+            for c, a, ver in h.get("notify") or []:
+                recorded |= self._record_notify(w, int(c), int(a), ver)
+            results, send = [], {}
+            for op in h.get("ops") or []:
+                c, a = int(op[0]), int(op[1])
+                cached_ver = op[2] if len(op) > 2 else None
+                cached_cum = op[3] if len(op) > 3 else None
+                if not self._admit("r", w, c, a):
+                    if recorded:
+                        self.snapshot()
+                    return self._stall("r", w, c, a)
+                served, modified = self._serve_read(w, c, a, cached_ver,
+                                                    cached_cum)
+                recorded = True
+                if modified:
+                    send[c] = self.chunks[c]
+                results.append([c, served, int(modified), self.cum_change[c]])
+            if recorded:
+                self.snapshot()
+            resp = self._base_resp()
+            manifest, payload = P.pack_arrays(send)
+            resp.update(results=results, manifest=manifest)
+            return resp, payload
+
+    def write_batch(self, h: dict, payload: bytes) -> tuple[dict, bytes]:
+        """Protocol-v2 multi-chunk write: ``ops`` rows are ``[chunk, itr]``
+        with the values packed into one payload via the ``pack_arrays``
+        manifest.  Same single-lock-pass admission, per-sub-op Lamport
+        stamps and once-per-batch snapshot as :meth:`read_batch`."""
+        w = h["worker"]
+        arrays = P.unpack_arrays(h.get("manifest") or [], payload)
+        with self.cond:
+            self._merge_clocks(h)
+            self._tick(h.get("ts"))
+            results, recorded = [], False
+            for c, a in h.get("ops") or []:
+                c, a = int(c), int(a)
+                if not self._admit("w", w, c, a):
+                    if recorded:
+                        self.snapshot()
+                    return self._stall("w", w, c, a)
+                self._apply_write(w, c, a, arrays[c])
+                recorded = True
+                results.append([c, self.version[c], self.cum_change[c]])
+            if recorded:
+                self.snapshot()
+            resp = self._base_resp()
+            resp["results"] = results
             return resp, b""
 
     def observe(self, h: dict) -> tuple[dict, bytes]:
@@ -231,6 +327,10 @@ class ShardState:
     def can(self, h: dict) -> tuple[dict, bytes]:
         w, c, a = h["worker"], h["chunk"], h["itr"]
         with self.cond:
+            # merge + tick like every other handler: clock gossip rides
+            # ``can`` requests too, and the response must carry a fresh ts
+            self._merge_clocks(h)
+            self._tick(h.get("ts"))
             pred = (self.policy.can_read if h["kind"] == "r"
                     else self.policy.can_write)
             resp = self._base_resp()
@@ -287,10 +387,14 @@ class ShardServer(socketserver.ThreadingTCPServer):
                     "error": "shard not initialized"}, b""
         if op == "read":
             return self.state.read(h)
+        if op == "read_batch":
+            return self.state.read_batch(h)
         if op == "notify_read":
             return self.state.notify_read(h)
         if op == "write":
             return self.state.write(h, payload)
+        if op == "write_batch":
+            return self.state.write_batch(h, payload)
         if op in ("commit", "frontier"):
             return self.state.observe(h)
         if op == "can":
@@ -301,6 +405,12 @@ class ShardServer(socketserver.ThreadingTCPServer):
 
 
 class _Handler(socketserver.BaseRequestHandler):
+    def setup(self):
+        # pipelining puts back-to-back small writes (broadcast ack, then a
+        # batch response) on one socket: without NODELAY, Nagle holds the
+        # second write for the peer's delayed ACK (~40ms per batch)
+        self.request.setsockopt(P.socket.IPPROTO_TCP, P.socket.TCP_NODELAY, 1)
+
     def handle(self):
         sock = self.request
         while True:
@@ -313,6 +423,10 @@ class _Handler(socketserver.BaseRequestHandler):
             except Exception as e:     # never kill the connection silently
                 resp, rp = {"ok": False,
                             "error": f"{type(e).__name__}: {e}"}, b""
+            if h.get("noreply"):       # one-way message (clock broadcast):
+                continue               # no response frame at all
+            if "id" in h:              # protocol v2: responses echo the
+                resp["id"] = h["id"]   # request id (pipelined matching)
             try:
                 P.send_msg(sock, resp, rp)
             except (ConnectionError, OSError):

@@ -68,12 +68,21 @@ def retry_with_backoff(fn: Callable[[], Any], backoff: Backoff,
                        retry_on: tuple[type[BaseException], ...]
                        = (ConnectionError, OSError),
                        telemetry: Any | None = None,
-                       describe: str = "") -> Any:
+                       describe: str = "",
+                       on_retry: Callable[[int], None] | None = None) -> Any:
     """Run ``fn`` retrying on transient (connection-shaped) failures with
     exponential backoff.  Each retry is reported into ``telemetry`` (a
     :class:`repro.pdb.telemetry.Telemetry`) so shard reconnects surface in
     the run's staleness summary as ``retried_steps``.  Re-raises the last
-    error once the budget is exhausted."""
+    error once the budget is exhausted.
+
+    ``on_retry(attempt)`` runs before each backoff sleep — the hook where a
+    caller resets per-attempt state.  The batched RPC client uses it to
+    drop the failed shard's connection (discarding any acknowledgements
+    still pipelined on the dead socket) so the replayed *batch* starts on a
+    frame-aligned stream; replayed sub-ops are deduplicated shard-side, so
+    a batch retry is at-least-once delivery with exactly-once recording
+    per sub-op."""
     attempt = 0
     while True:
         try:
@@ -84,6 +93,8 @@ def retry_with_backoff(fn: Callable[[], Any], backoff: Backoff,
                 raise
             if telemetry is not None:
                 telemetry.on_retry(attempt)
+            if on_retry is not None:
+                on_retry(attempt)
             d = backoff.delay(attempt)
             log.warning("%s failed (%s); retry %d/%d in %.2fs",
                         describe or "op", e, attempt, backoff.max_retries, d)

@@ -252,15 +252,17 @@ def test_jax_engine_group_delays_telemetry():
 # The multi-process sharded backend (repro.pdb.server)
 # ---------------------------------------------------------------------------
 
+@pytest.mark.parametrize("batched", [False, True], ids=["per-op", "batched"])
 @pytest.mark.parametrize("policy", SEQ_POLICIES)
-def test_server_delta0_bit_identical(data, policy):
+def test_server_delta0_bit_identical(data, policy, batched):
     """Real shard processes, socket RPC, client caches — and still
-    bit-identical to single-threaded sequential execution at delta=0."""
+    bit-identical to single-threaded sequential execution at delta=0,
+    on both the per-chunk v1 path and the batched/pipelined v2 path."""
     task = _task(data)
     workers = 4
     seq = T.run_sequential(task, workers)
     res = run_distributed_lr(task, workers, n_shards=2, policy=policy,
-                             delta=0)
+                             delta=0, batched=batched)
     assert np.array_equal(res.theta, seq)
     assert H.is_complete(res.history, workers, task.n_iters)
     assert H.is_sequentially_correct(res.history, workers)
@@ -268,11 +270,14 @@ def test_server_delta0_bit_identical(data, policy):
     assert res.staleness["stale_reads"] == 0
 
 
-def test_server_delta_relaxed_cache_hits(data):
+@pytest.mark.parametrize("batched", [False, True], ids=["per-op", "batched"])
+def test_server_delta_relaxed_cache_hits(data, batched):
     """delta>0 must respect the staleness bound, and the client cache must
-    actually serve reads (admissible cached versions skip the payload)."""
+    actually serve reads (admissible cached versions skip the payload) —
+    as piggybacked ``notify`` batch entries on the v2 path."""
     task = _task(data, n_iters=8)
-    res = run_distributed_lr(task, 4, n_shards=2, policy="dc-array", delta=1)
+    res = run_distributed_lr(task, 4, n_shards=2, policy="dc-array", delta=1,
+                             batched=batched)
     assert res.staleness["max_staleness"] <= 1
     assert res.cache["cache_hits"] > 0
     assert res.cache["bytes_saved"] > 0
@@ -280,20 +285,24 @@ def test_server_delta_relaxed_cache_hits(data):
     assert T.loss(task, res.theta) < init_loss
 
 
-def test_server_ssp_clock_bound(data):
+@pytest.mark.parametrize("batched", [False, True], ids=["per-op", "batched"])
+def test_server_ssp_clock_bound(data, batched):
     """SSP on first-class per-worker clocks: the slack bound must hold on
     the merged global history exactly as it does in-process."""
     task = _task(data, n_iters=8)
-    res = run_distributed_lr(task, 4, n_shards=2, policy="ssp", delta=2)
+    res = run_distributed_lr(task, 4, n_shards=2, policy="ssp", delta=2,
+                             batched=batched)
     assert H.is_complete(res.history, 4, 8)
     assert ssp_clock_bound_violations(res.history, 4, 2) == []
     assert res.staleness["max_staleness"] <= 2
 
 
-def test_server_op_counts_match_other_backends(data):
+@pytest.mark.parametrize("batched", [False, True], ids=["per-op", "batched"])
+def test_server_op_counts_match_other_backends(data, batched):
     task = _task(data, n_iters=4)
     p = 3
-    res = run_distributed_lr(task, p, n_shards=2, policy="hogwild")
+    res = run_distributed_lr(task, p, n_shards=2, policy="hogwild",
+                             batched=batched)
     assert res.staleness["reads"] == p * p * task.n_iters
     assert res.staleness["writes"] == p * task.n_iters
     assert H.is_complete(res.history, p, task.n_iters)

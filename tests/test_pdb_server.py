@@ -12,8 +12,10 @@ Covers the layers the conformance matrix exercises only end-to-end:
 """
 import math
 import socket
+import struct
 import tempfile
 import threading
+import time
 
 import numpy as np
 import pytest
@@ -69,6 +71,57 @@ def test_pack_unpack_arrays():
         assert out[c].dtype == v.dtype
 
 
+def test_pack_unpack_mixed_dtypes_empty_and_0d():
+    """pack_arrays/unpack_arrays must preserve dtype and shape exactly —
+    including 0-d scalars and zero-length arrays — across mixed-dtype
+    batches (the write_batch payload of a heterogeneous chunk set)."""
+    arrays = {1: np.arange(6, dtype=np.float16).reshape(2, 3),
+              3: np.array(2.5, dtype=np.float32),           # 0-d
+              4: np.array([], dtype=np.int64),              # empty
+              9: np.arange(4, dtype=np.int64)}
+    manifest, payload = P.pack_arrays(arrays)
+    out = P.unpack_arrays(manifest, payload)
+    assert set(out) == set(arrays)
+    for c, v in arrays.items():
+        assert out[c].dtype == v.dtype and out[c].shape == v.shape
+        np.testing.assert_array_equal(out[c], v)
+
+
+def test_pack_manifest_offsets_are_contiguous_and_exact():
+    arrays = {0: np.zeros(5, dtype=np.float64),
+              2: np.ones((3, 2), dtype=np.float16),
+              7: np.arange(3, dtype=np.int64)}
+    manifest, payload = P.pack_arrays(arrays)
+    off = 0
+    for cid, dtype, shape, o, nbytes in manifest:
+        assert o == off               # densely packed, no gaps or overlap
+        assert nbytes == np.dtype(dtype).itemsize * int(np.prod(shape))
+        off += nbytes
+    assert off == len(payload)
+    assert [row[0] for row in manifest] == sorted(arrays)
+
+
+def test_recv_rejects_oversized_frames():
+    a, b = socket.socketpair()
+    try:
+        a.sendall(struct.pack("!I", P.MAX_FRAME + 1))
+        with pytest.raises(ConnectionError, match="oversized header"):
+            P.recv_msg(b)
+    finally:
+        a.close()
+        b.close()
+    a, b = socket.socketpair()
+    try:
+        hb = b'{"op":"x"}'
+        a.sendall(struct.pack("!I", len(hb)) + hb
+                  + struct.pack("!I", P.MAX_FRAME + 1))
+        with pytest.raises(ConnectionError, match="oversized payload"):
+            P.recv_msg(b)
+    finally:
+        a.close()
+        b.close()
+
+
 def test_shard_hash_partitions_chunks():
     for n_shards in (1, 2, 3, 5):
         seen = []
@@ -79,6 +132,138 @@ def test_shard_hash_partitions_chunks():
         assert sorted(seen) == list(range(40))   # a partition, no overlap
     # hashing scatters: consecutive chunks don't all land on one shard
     assert len({shard_of(c, 2) for c in range(4)}) == 2
+
+
+# ---------------------------------------------------------------------------
+# Protocol v2: request-id matching, one-way broadcasts, pipelining
+# ---------------------------------------------------------------------------
+
+def test_recv_matched_drains_out_of_order_acks():
+    """Pipelined messages complete in any order relative to each other:
+    the receive loop must drain earlier pending ids until the awaited
+    response arrives, and treat an id it never issued as a protocol
+    violation (triggering reconnect-and-replay, not silent misdelivery)."""
+    from repro.pdb.server.client import ClientParameterDB, _Conn
+    client = ClientParameterDB(0, [("127.0.0.1", 9)], n_workers=2,
+                               n_chunks=2)
+    a, b = socket.socketpair()
+    try:
+        conn = _Conn(sock=a, pending={1, 2})
+        client._conns[0] = conn
+        P.send_msg(b, {"ok": True, "id": 2, "ts": 5})   # acks, out of order
+        P.send_msg(b, {"ok": True, "id": 1, "ts": 6})
+        P.send_msg(b, {"ok": True, "id": 3, "ts": 7, "answer": 42})
+        resp, rp = client._recv_matched(conn, 3)
+        assert resp["answer"] == 42 and rp == b""
+        assert conn.pending == set()          # both acks drained
+        assert client.lamport >= 7            # every stamp folded
+        P.send_msg(b, {"ok": True, "id": 99})
+        with pytest.raises(ConnectionResetError, match="protocol error"):
+            client._recv_matched(conn, 4)
+    finally:
+        a.close()
+        b.close()
+
+
+def test_noreply_broadcast_sends_no_frame_and_ping_barriers():
+    """A ``noreply`` message gets *no* response frame; because a shard
+    serves each connection FIFO, the next synchronous exchange (ping)
+    proves every one-way message before it was processed — here the
+    frontier broadcasts that admit a BSP write."""
+    from repro.pdb.server.shard import ShardServer
+    server = ShardServer(("127.0.0.1", 0))
+    thread = threading.Thread(target=server.serve_forever, daemon=True)
+    thread.start()
+    sock = None
+    try:
+        sock = P.connect(server.server_address, timeout=5.0)
+        manifest, payload = P.pack_arrays({0: np.zeros(2)})
+        P.send_msg(sock, {"op": "init", "config": {
+            "shard_id": 0, "n_shards": 1, "n_workers": 2, "n_chunks": 1,
+            "policy": "bsp", "delta": 0, "vbound": None, "timeout": 0.2,
+            "record": True}, "manifest": manifest}, payload)
+        resp, _ = P.recv_msg(sock)
+        assert resp["ok"]
+        for w in (0, 1):                      # one-way: no response frames
+            P.send_msg(sock, {"op": "frontier", "worker": w, "itr": 1,
+                              "id": 100 + w, "noreply": True})
+        P.send_msg(sock, {"op": "ping", "id": 7})
+        resp, _ = P.recv_msg(sock)            # next frame is the ping's —
+        assert resp["id"] == 7 and resp["ok"]  # broadcasts were silent
+        P.send_msg(sock, {"op": "can", "kind": "w", "worker": 0,
+                          "chunk": 0, "itr": 1, "id": 8})
+        resp, _ = P.recv_msg(sock)
+        assert resp["id"] == 8 and resp["admissible"]   # frontiers landed
+    finally:
+        if sock is not None:
+            sock.close()
+        server.shutdown()
+        server.server_close()
+
+
+def test_connect_phase_timeout_surfaces_as_waittimeout(monkeypatch):
+    """A hung (unreachable) shard at connection *establishment* must raise
+    the standard WaitTimeout diagnostic, not a raw socket error."""
+    from repro.pdb.server.client import ClientParameterDB
+
+    def hang(addr, timeout):
+        raise TimeoutError("connect timed out")
+
+    monkeypatch.setattr(P, "connect", hang)
+    db = ClientParameterDB(0, [("127.0.0.1", 1)], n_workers=1, n_chunks=1,
+                           timeout=0.1, backoff=Backoff(max_retries=0))
+    with pytest.raises(WaitTimeout) as ei:
+        db.read(0, 0, 1)
+    msg = str(ei.value)
+    assert "timed out" in msg and "shard0" in msg and "rpc" in msg
+
+
+# ---------------------------------------------------------------------------
+# Shard-state regressions: clock gossip on `can`, post-admission stamps
+# ---------------------------------------------------------------------------
+
+def test_can_merges_clock_gossip_and_ticks():
+    """`can` must merge the request's piggybacked clocks and tick the
+    Lamport clock like every other handler — the gossip alone can flip
+    the answer (here: a BSP write admitted by the carried frontier)."""
+    from repro.pdb.server.shard import ShardConfig, ShardState
+    cfg = ShardConfig(shard_id=0, n_shards=1, n_workers=2, n_chunks=1,
+                      policy="bsp", timeout=0.2)
+    st = ShardState(cfg, {0: np.zeros(2)})
+    resp, _ = st.can({"op": "can", "kind": "w", "worker": 0, "chunk": 0,
+                      "itr": 1, "ts": 41,
+                      "clocks": {"commit": [0, 0], "frontier": [1, 1]}})
+    assert resp["admissible"]         # the piggybacked frontier admits it
+    assert resp["ts"] > 41            # receipt event ticked past the sender
+
+
+def test_blocked_read_is_stamped_after_admitting_write():
+    """An op that waited for admission must take its Lamport stamp *after*
+    the op that admitted it, or the merged global history misorders them
+    (the read would sort before the write whose value it returned)."""
+    from repro.pdb.server.shard import ShardConfig, ShardState
+    cfg = ShardConfig(shard_id=0, n_shards=1, n_workers=2, n_chunks=1,
+                      policy="dc", timeout=5.0)
+    st = ShardState(cfg, {0: np.zeros(2)})
+    for w in (0, 1):                  # iteration-1 reads: admissible
+        st.read({"op": "read", "worker": w, "chunk": 0, "itr": 1})
+    done = []
+
+    def blocked():                    # needs w[pi0][1]: blocks
+        resp, _ = st.read({"op": "read", "worker": 1, "chunk": 0, "itr": 2})
+        done.append(resp)
+
+    t = threading.Thread(target=blocked, daemon=True)
+    t.start()
+    time.sleep(0.1)                   # let the read reach its admission wait
+    meta, payload = P.encode_array(np.ones(2))
+    st.write({"op": "write", "worker": 0, "chunk": 0, "itr": 1, **meta},
+             payload)
+    t.join(timeout=5.0)
+    assert done and done[0]["ok"]
+    stamps = {(op.kind, op.worker, op.itr): ts
+              for ts, op in st.telemetry.timed_history()}
+    assert stamps[("r", 1, 2)] > stamps[("w", 0, 1)]
 
 
 # ---------------------------------------------------------------------------
